@@ -1,0 +1,65 @@
+"""Shared benchmark utilities: timing, workloads, skiplist builders."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import skiplist as sl
+
+
+def bench(fn: Callable, *args, iters: int = 20, warmup: int = 3) -> float:
+    """Median wall time per call (seconds); blocks on results."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def build_list(n: int, *, foresight: bool, levels: int = 0, seed: int = 0,
+               key_span: int = 0) -> Tuple[sl.SkipListState, np.ndarray]:
+    """Synchrobench convention: key range = 2x initial size."""
+    span = key_span or 2 * n
+    levels = levels or max(4, int(np.ceil(np.log2(n))) + 2)
+    rng = np.random.default_rng(seed)
+    keys = np.sort(rng.choice(span, n, replace=False)).astype(np.int32)
+    cap = int(2 ** np.ceil(np.log2(n * 2 + 4)))
+    st = sl.build(jnp.asarray(keys), jnp.asarray(keys), capacity=cap,
+                  levels=levels, foresight=foresight, seed=seed)
+    return st, keys
+
+
+def uniform_queries(span: int, batch: int, seed: int = 1) -> jnp.ndarray:
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, span, batch).astype(np.int32))
+
+
+def zipf_queries(keys: np.ndarray, batch: int, a: float = 1.2,
+                 seed: int = 1) -> jnp.ndarray:
+    """Zipfian over the key population (YCSB-style hot keys)."""
+    rng = np.random.default_rng(seed)
+    ranks = (rng.zipf(a, batch) - 1) % len(keys)
+    return jnp.asarray(keys[ranks].astype(np.int32))
+
+
+def mixed_ops(span: int, batch: int, update_frac: float, seed: int = 2
+              ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Synchrobench workload: update_frac split evenly insert/delete."""
+    rng = np.random.default_rng(seed)
+    r = rng.random(batch)
+    ops = np.where(r < update_frac / 2, sl.OP_INSERT,
+                   np.where(r < update_frac, sl.OP_DELETE, sl.OP_READ))
+    keys = rng.integers(0, span, batch).astype(np.int32)
+    return (jnp.asarray(ops.astype(np.int32)), jnp.asarray(keys),
+            jnp.asarray(keys))
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.3f},{derived}"

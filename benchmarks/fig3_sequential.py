@@ -1,0 +1,61 @@
+"""Paper Figure 3: throughput vs size x update ratio, base vs Foresight.
+
+The paper's sequential microbenchmark: one operation stream against
+skiplists of growing size, at 0% / 5% / 50% update ratios.  Our "thread"
+is a lane, so the sequential case = small-batch (32) lock-step traversal;
+updates are the linearized scan.  Reports µs/op and Mops derived, plus the
+Foresight improvement % per cell (the paper's bottom rows).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import bench, build_list, csv_row, mixed_ops, \
+    uniform_queries
+from repro.core import skiplist as sl
+
+SIZES = [2**7, 2**9, 2**11, 2**13, 2**15]
+UPDATES = [0.0, 0.05, 0.5]
+BATCH = 32
+
+
+def _search_bench(st, q, iters=10):
+    fn = lambda s, qq: sl.search(s, qq).found
+    t = bench(fn, st, q, iters=iters)
+    return t / BATCH
+
+
+def _mixed_bench(st, ops, keys, vals, iters=3):
+    fn = lambda s, o, k, v: sl.apply_ops(s, o, k, v)[1]
+    t = bench(fn, st, ops, keys, vals, iters=iters)
+    return t / ops.shape[0]
+
+
+def run() -> list:
+    rows = []
+    for n in SIZES:
+        for upd in UPDATES:
+            per_op = {}
+            for fs in (False, True):
+                st, keys = build_list(n, foresight=fs)
+                if upd == 0.0:
+                    q = uniform_queries(2 * n, BATCH)
+                    per_op[fs] = _search_bench(st, q)
+                else:
+                    ops, k, v = mixed_ops(2 * n, BATCH, upd)
+                    per_op[fs] = _mixed_bench(st, ops, k, v)
+            imp = (per_op[False] - per_op[True]) / per_op[False] * 100
+            for fs in (False, True):
+                name = (f"fig3/size={n}/upd={int(upd*100)}%/"
+                        f"{'foresight' if fs else 'base'}")
+                mops = 1e-6 / per_op[fs]
+                rows.append(csv_row(name, per_op[fs] * 1e6,
+                                    f"Mops={mops:.3f}"))
+            rows.append(csv_row(f"fig3/size={n}/upd={int(upd*100)}%/gain",
+                                0.0, f"improvement_pct={imp:.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,49 @@
+"""Paper Figures 4/5: throughput vs thread count (-> lane-batch sweep).
+
+The paper scales threads 1..128 on a 2^25-element list; our concurrency
+analogue is the query batch width of the lock-step traversal (VPU lanes =
+threads).  List size scaled to CPU (2^15); the trend — Foresight's edge
+holds or grows with "thread" count — is the reproduced claim.
+"""
+from __future__ import annotations
+
+from benchmarks.common import bench, build_list, csv_row, uniform_queries
+from repro.core import skiplist as sl
+
+SIZE = 2**15
+BATCHES = [1, 8, 32, 128, 512]
+
+
+def run() -> list:
+    rows = []
+    sts = {fs: build_list(SIZE, foresight=fs)[0] for fs in (False, True)}
+    for b in BATCHES:
+        per = {}
+        perf = {}
+        for fs in (False, True):
+            q = uniform_queries(2 * SIZE, b)
+            fn = lambda s, qq: sl.search(s, qq).found
+            t = bench(fn, sts[fs], q, iters=10)
+            per[fs] = t / b
+            name = f"fig4/batch={b}/{'foresight' if fs else 'base'}"
+            rows.append(csv_row(name, per[fs] * 1e6,
+                                f"Mops={1e-6/per[fs]:.3f}"))
+            # beyond-paper optimized read path (§Perf iterations 8-9)
+            fnf = lambda s, qq: sl.search_fast(s, qq)[0]
+            tf = bench(fnf, sts[fs], q, iters=10)
+            perf[fs] = tf / b
+            rows.append(csv_row(
+                f"fig4/batch={b}/{'foresight' if fs else 'base'}_fast",
+                perf[fs] * 1e6, f"Mops={1e-6/perf[fs]:.3f}"))
+        imp = (per[False] - per[True]) / per[False] * 100
+        rows.append(csv_row(f"fig4/batch={b}/gain", 0.0,
+                            f"improvement_pct={imp:.1f}"))
+        impf = (perf[False] - perf[True]) / perf[False] * 100
+        rows.append(csv_row(f"fig4/batch={b}/gain_fast", 0.0,
+                            f"improvement_pct={impf:.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,42 @@
+"""Paper Figures 6/7: 128 "threads" (lanes), throughput vs list size."""
+from __future__ import annotations
+
+from benchmarks.common import bench, build_list, csv_row, uniform_queries
+from repro.core import skiplist as sl
+
+SIZES = [2**9, 2**11, 2**13, 2**15, 2**17]
+BATCH = 128
+
+
+def run() -> list:
+    rows = []
+    for n in SIZES:
+        per = {}
+        perf = {}
+        for fs in (False, True):
+            st, _ = build_list(n, foresight=fs)
+            q = uniform_queries(2 * n, BATCH)
+            fn = lambda s, qq: sl.search(s, qq).found
+            t = bench(fn, st, q, iters=10)
+            per[fs] = t / BATCH
+            name = f"fig6/size={n}/{'foresight' if fs else 'base'}"
+            rows.append(csv_row(name, per[fs] * 1e6,
+                                f"Mops={1e-6/per[fs]:.3f}"))
+            fnf = lambda s, qq: sl.search_fast(s, qq)[0]
+            tf = bench(fnf, st, q, iters=10)
+            perf[fs] = tf / BATCH
+            rows.append(csv_row(
+                f"fig6/size={n}/{'foresight' if fs else 'base'}_fast",
+                perf[fs] * 1e6, f"Mops={1e-6/perf[fs]:.3f}"))
+        imp = (per[False] - per[True]) / per[False] * 100
+        rows.append(csv_row(f"fig6/size={n}/gain", 0.0,
+                            f"improvement_pct={imp:.1f}"))
+        impf = (perf[False] - perf[True]) / perf[False] * 100
+        rows.append(csv_row(f"fig6/size={n}/gain_fast", 0.0,
+                            f"improvement_pct={impf:.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

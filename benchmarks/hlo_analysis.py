@@ -1,0 +1,354 @@
+"""Scan-aware HLO cost analyzer — the engine behind §Roofline.
+
+``compiled.cost_analysis()`` counts every computation ONCE, but jax lowers
+``lax.scan`` to an HLO while loop, so an L-layer model's per-layer FLOPs,
+bytes and collectives are undercounted by ~L×.  This module parses the
+compiled (post-SPMD, per-device) HLO text, reconstructs the call graph
+(entry -> fusions / while bodies / conditionals), recovers while trip counts
+from their condition constants, and propagates multipliers:
+
+  flops(comp)  = Σ dot-flops(op) + Σ_child mult(child)·flops(child)
+  bytes(comp)  = Σ operand+result bytes of *kernel-level* ops (fusions count
+                 their boundary traffic only — the fusion body is on-chip)
+  coll (comp)  = Σ collective result bytes, likewise scaled by trip counts
+
+All numbers are PER-DEVICE (the compiled module is the per-device SPMD
+program).  Multiply by chip count for machine totals.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+COMP_HEAD_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+COND_BODY_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+DIMS_RE = {
+    "lhs_c": re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}"),
+    "lhs_b": re.compile(r"lhs_batch_dims=\{([0-9,]*)\}"),
+}
+CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+# ops that are aliases/bookkeeping, not memory traffic
+NO_TRAFFIC = {"parameter", "get-tuple-element", "tuple", "bitcast", "constant",
+              "iota", "after-all", "copy-start", "copy-done"}
+
+
+def shape_elems_bytes(text: str) -> Tuple[int, int]:
+    elems = bytes_ = 0
+    for dt, dims in SHAPE_RE.findall(text):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        bytes_ += n * DTYPE_BYTES[dt]
+    return elems, bytes_
+
+
+def shape_dims(text: str) -> List[int]:
+    m = SHAPE_RE.search(text)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    rtype: str
+    opcode: str
+    rest: str          # operand list + attrs (raw tail of the line)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    symtab: Dict[str, str]           # op name -> result type text
+
+
+def _balanced(s: str, start: int) -> int:
+    """Index one past the paren group opening at s[start] (== '(')."""
+    depth = 0
+    for i in range(start, len(s)):
+        if s[i] == "(":
+            depth += 1
+        elif s[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return i + 1
+    return len(s)
+
+
+def _tokenize_op(line: str) -> Optional[Op]:
+    """'%name = TYPE opcode(operands), attrs' with balanced-paren scanning
+    (tuple types may contain '/*index=N*/' comments and nested brackets)."""
+    m = NAME_RE.match(line)
+    if not m:
+        return None
+    name, rest = m.group(1), m.group(2)
+    rest = rest.strip()
+    if rest.startswith("("):                      # tuple result type
+        end = _balanced(rest, 0)
+        rtype = rest[:end]
+        rest = rest[end:].lstrip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        rtype = rest[:sp]
+        rest = rest[sp + 1:].lstrip()
+    par = rest.find("(")
+    if par < 0:
+        return None
+    opcode = rest[:par].strip()
+    if not opcode or not re.fullmatch(r"[\w\-]+", opcode):
+        return None
+    end = _balanced(rest, par)
+    operands = rest[par + 1:end - 1]
+    attrs = rest[end:]
+    return Op(name, rtype, opcode, operands + ")" + attrs)
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        if not line.startswith(" "):
+            m = COMP_HEAD_RE.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = Computation(m.group(1), [], {})
+                comps[cur.name] = cur
+            elif line.strip() == "}":
+                cur = None
+            continue
+        if cur is None:
+            continue
+        op = _tokenize_op(line)
+        if op is None:
+            continue
+        cur.ops.append(op)
+        cur.symtab[op.name] = op.rtype
+    return comps
+
+
+def _operand_names(rest: str) -> List[str]:
+    """Operand %names before the top-level close paren of the op call.
+
+    ``Op.rest`` holds 'operands)attrs' — operands run until the unmatched
+    ')' at depth 0.
+    """
+    depth = 0
+    out = []
+    buf = ""
+    for ch in rest:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            if depth == 0:
+                if buf:
+                    out.append(buf)
+                break
+            depth -= 1
+        if depth == 0 and ch == ",":
+            out.append(buf)
+            buf = ""
+        else:
+            buf += ch
+    names = []
+    for tok in out:
+        names.extend(re.findall(r"%([\w.\-]+)", tok))
+    return names
+
+
+def dot_flops(op: Op, comp: Computation) -> int:
+    """2 * prod(output) * contraction_size for a dot op."""
+    out_dims = shape_dims(op.rtype)
+    operands = _operand_names(op.rest)
+    if not operands:
+        return 0
+    lhs_type = comp.symtab.get(operands[0], "")
+    lhs_dims = shape_dims(lhs_type)
+    mc = DIMS_RE["lhs_c"].search(op.rest)
+    contract = 1
+    if mc and lhs_dims:
+        for d in mc.group(1).split(","):
+            if d and int(d) < len(lhs_dims):
+                contract *= lhs_dims[int(d)]
+    n_out = math.prod(out_dims) if out_dims else 0
+    return 2 * n_out * contract
+
+
+def conv_flops(op: Op, comp: Computation) -> int:
+    out_dims = shape_dims(op.rtype)
+    operands = _operand_names(op.rest)
+    if len(operands) < 2:
+        return 0
+    k_dims = shape_dims(comp.symtab.get(operands[1], ""))
+    if not out_dims or not k_dims:
+        return 0
+    return 2 * math.prod(out_dims) * math.prod(k_dims[1:])
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+
+class Analyzer:
+    def __init__(self, hlo_text: str):
+        self.comps = parse_hlo(hlo_text)
+        self._memo: Dict[str, Cost] = {}
+        # computations reached as fusion bodies: on-chip, no byte accounting
+        self.fusion_bodies = set()
+        for comp in self.comps.values():
+            for op in comp.ops:
+                if op.opcode in ("fusion",):
+                    m = CALLS_RE.search(op.rest)
+                    if m:
+                        self.fusion_bodies.add(m.group(1))
+
+    def trip_count(self, cond_name: str) -> int:
+        cond = self.comps.get(cond_name)
+        if cond is None:
+            return 1
+        consts = []
+        for op in cond.ops:
+            consts += [int(x) for x in CONST_RE.findall(
+                f"{op.rtype} {op.opcode}({op.rest}")]
+        # jax scan cond: iter < N -> take the max plausible constant
+        return max(consts) if consts else 1
+
+    def cost(self, comp_name: str, as_fusion: bool = False) -> Cost:
+        key = f"{comp_name}|{as_fusion}"
+        if key in self._memo:
+            return self._memo[key]
+        comp = self.comps.get(comp_name)
+        c = Cost(coll_by_kind={})
+        if comp is None:
+            return c
+        for op in comp.ops:
+            # flops
+            if op.opcode == "dot":
+                c.flops += dot_flops(op, comp)
+            elif op.opcode == "convolution":
+                c.flops += conv_flops(op, comp)
+            # children
+            if op.opcode == "fusion":
+                m = CALLS_RE.search(op.rest)
+                if m:
+                    child = self.cost(m.group(1), as_fusion=True)
+                    c.flops += child.flops
+                    c.coll_bytes += child.coll_bytes
+            elif op.opcode == "while":
+                m = COND_BODY_RE.search(op.rest)
+                if m:
+                    trips = self.trip_count(m.group(1))
+                    body = self.cost(m.group(2))
+                    c.flops += trips * body.flops
+                    c.bytes += trips * body.bytes
+                    c.coll_bytes += trips * body.coll_bytes
+                    for k, v in body.coll_by_kind.items():
+                        c.coll_by_kind[k] = (c.coll_by_kind.get(k, 0)
+                                             + trips * v)
+            elif op.opcode == "conditional":
+                m = BRANCHES_RE.search(op.rest)
+                if m:
+                    kids = re.findall(r"%?([\w.\-]+)", m.group(1))
+                    if kids:
+                        costs = [self.cost(k) for k in kids]
+                        # worst-case branch
+                        best = max(costs, key=lambda x: x.flops + x.bytes)
+                        c.flops += best.flops
+                        c.bytes += best.bytes
+                        c.coll_bytes += best.coll_bytes
+            elif op.opcode in ("call", "async-start"):
+                m = TO_APPLY_RE.search(op.rest) or CALLS_RE.search(op.rest)
+                if m:
+                    child = self.cost(m.group(1))
+                    c.flops += child.flops
+                    c.bytes += child.bytes
+                    c.coll_bytes += child.coll_bytes
+            # collectives (result bytes; ~operand bytes for ar/rs semantics)
+            base = op.opcode.replace("-start", "")
+            if base in COLLECTIVES:
+                _, b = shape_elems_bytes(op.rtype)
+                c.coll_bytes += b
+                c.coll_by_kind[base] = c.coll_by_kind.get(base, 0) + b
+            # memory traffic (kernel boundary): result + operands
+            if not as_fusion and op.opcode not in NO_TRAFFIC \
+                    and op.opcode != "while":
+                _, rb = shape_elems_bytes(op.rtype)
+                ob = 0
+                for nm in _operand_names(op.rest):
+                    t = comp.symtab.get(nm)
+                    if t:
+                        _, bb = shape_elems_bytes(t)
+                        ob += bb
+                c.bytes += rb + ob
+        self._memo[key] = c
+        return c
+
+    def entry_cost(self) -> Cost:
+        for name, comp in self.comps.items():
+            if any(op.opcode == "ROOT" for op in comp.ops):
+                pass
+        # entry = the computation that is not called by anyone
+        called = set(self.fusion_bodies)
+        for comp in self.comps.values():
+            for op in comp.ops:
+                m = COND_BODY_RE.search(op.rest)
+                if m:
+                    called.update(m.groups())
+                m2 = TO_APPLY_RE.search(op.rest)
+                if m2:
+                    called.add(m2.group(1))
+                m3 = BRANCHES_RE.search(op.rest)
+                if m3:
+                    called.update(re.findall(r"%?([\w.\-]+)", m3.group(1)))
+                m4 = CALLS_RE.search(op.rest)
+                if m4:
+                    called.add(m4.group(1))
+        roots = [n for n in self.comps if n not in called]
+        total = Cost(coll_by_kind={})
+        for r in roots:
+            c = self.cost(r)
+            total.flops += c.flops
+            total.bytes += c.bytes
+            total.coll_bytes += c.coll_bytes
+            for k, v in c.coll_by_kind.items():
+                total.coll_by_kind[k] = total.coll_by_kind.get(k, 0) + v
+        return total
+
+
+def analyze(hlo_text: str) -> Dict[str, float]:
+    a = Analyzer(hlo_text)
+    c = a.entry_cost()
+    return {
+        "flops_per_device": c.flops,
+        "bytes_per_device": c.bytes,
+        "collective_bytes_per_device": c.coll_bytes,
+        "collective_by_kind": dict(c.coll_by_kind),
+    }

@@ -1,0 +1,103 @@
+"""Assemble EXPERIMENTS.md §Dry-run and §Roofline tables from results/.
+
+  PYTHONPATH=src:. python -m benchmarks.report > /tmp/tables.md
+"""
+from __future__ import annotations
+
+import json
+import sys
+from collections import defaultdict
+
+
+def load_jsonl(path):
+    out = []
+    try:
+        with open(path) as f:
+            for line in f:
+                try:
+                    out.append(json.loads(line))
+                except json.JSONDecodeError:
+                    pass
+    except FileNotFoundError:
+        pass
+    return out
+
+
+def dryrun_table(path="results/dryrun_cells_final.jsonl"):
+    rows = load_jsonl(path)
+    # keep the latest entry per cell
+    cells = {}
+    for r in rows:
+        cells[(r["arch"], r["shape"], r["multi_pod"])] = r
+    print("| arch | shape | mesh | compile s | HLO flops/dev (raw) | "
+          "collective kinds | args bytes/dev |")
+    print("|" + "---|" * 7)
+    for (arch, shape, mp), r in sorted(cells.items()):
+        if not r.get("ok"):
+            print(f"| {arch} | {shape} | {'2x16x16' if mp else '16x16'} "
+                  f"| FAILED | | | |")
+            continue
+        kinds = ",".join(sorted(r["collectives"]["per_kind"]))
+        flops = r["cost_analysis"].get("flops", 0)
+        mem = r.get("memory_analysis", {})
+        args = mem.get("argument_size_in_bytes", 0)
+        print(f"| {arch} | {shape} | {'2x16x16' if mp else '16x16'} "
+              f"| {r['compile_s']:.1f} | {flops:.2e} | {kinds} "
+              f"| {args / 1e9:.2f} GB |")
+    ok = sum(1 for r in cells.values() if r.get("ok"))
+    print(f"\n**{ok}/{len(cells)} cells compiled OK.**")
+
+
+def roofline_table(tag="final", path="results/roofline.jsonl"):
+    rows = [r for r in load_jsonl(path)
+            if r.get("tag") == tag and "error" not in r]
+    latest = {}
+    for r in rows:
+        latest[(r["arch"], r["shape"])] = r
+    print("| arch | shape | t_compute s | t_memory s (analytic) | "
+          "t_collective s | dominant | MODEL_FLOPS | useful ratio | "
+          "roofline frac |")
+    print("|" + "---|" * 9)
+    for (arch, shape), r in sorted(latest.items()):
+        print(f"| {arch} | {shape} | {r['t_compute_s']:.4f} "
+              f"| {r['t_memory_s']:.4f} | {r['t_collective_s']:.4f} "
+              f"| **{r['dominant']}** | {r['model_flops']:.2e} "
+              f"| {r['useful_ratio']:.3f} | {r['roofline_fraction']:.3f} |")
+
+
+def perf_history(path="results/roofline.jsonl"):
+    rows = load_jsonl(path)
+    hist = defaultdict(dict)
+    for r in rows:
+        if "error" in r:
+            continue
+        hist[(r["arch"], r["shape"])][r["tag"]] = r
+    for (arch, shape), tags in sorted(hist.items()):
+        if len(tags) < 2:
+            continue
+        print(f"\n**{arch} x {shape}**")
+        print("| tag | coll GB/dev | t_coll s | t_comp s | dominant | frac |")
+        print("|" + "---|" * 6)
+        order = ["baseline", "moe_sharded", "moe_grouped", "moe_tuned",
+                 "moe_dp_free", "moe_dp_ctp", "bf16_reduce", "kv_replicated",
+                 "remat_full", "seq_parallel", "final"]
+        for t in order:
+            if t not in tags:
+                continue
+            r = tags[t]
+            print(f"| {t} | {r['coll_bytes_per_device'] / 1e9:.1f} "
+                  f"| {r['t_collective_s']:.2f} | {r['t_compute_s']:.3f} "
+                  f"| {r['dominant']} | {r['roofline_fraction']:.4f} |")
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        print("## Dry-run matrix\n")
+        dryrun_table()
+    if which in ("all", "roofline"):
+        print("\n## Roofline (single-pod, final)\n")
+        roofline_table()
+    if which in ("all", "perf"):
+        print("\n## Perf iteration history\n")
+        perf_history()

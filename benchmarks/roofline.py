@@ -1,0 +1,250 @@
+"""Roofline analysis per (arch x shape) on the single-pod mesh.
+
+For every cell: re-lower + compile (single-pod), dump the per-device HLO,
+run the scan-aware analyzer (hlo_analysis.py), and derive the three terms:
+
+  compute term    = flops_per_device / PEAK_FLOPS          [s]
+  memory term     = bytes_per_device / HBM_BW              [s]  (upper bound:
+                    fusion-boundary traffic, no cache-residency modeling)
+  collective term = collective_bytes_per_device / LINK_BW  [s]
+
+plus MODEL_FLOPS (6·N·D train / 2·N·D prefill / 2·N·B decode, N = active
+params) and the usefulness ratio MODEL_FLOPS / (flops_per_device · chips).
+
+Results stream to results/roofline.jsonl; `--table` renders the markdown
+for EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src:. python -m benchmarks.roofline run [--only-arch A]
+  PYTHONPATH=src:. python -m benchmarks.roofline table
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # bytes/s
+LINK_BW = 50e9             # bytes/s per ICI link
+CHIPS = 256                # single-pod 16x16
+
+OUT = "results/roofline.jsonl"
+
+
+def model_flops(kind: str, n_active: int, seq_len: int, global_batch: int
+                ) -> float:
+    if kind == "train":
+        return 6.0 * n_active * seq_len * global_batch
+    if kind == "prefill":
+        return 2.0 * n_active * seq_len * global_batch
+    return 2.0 * n_active * global_batch          # decode: one token/seq
+
+
+def analytic_memory_bytes(cfg, spec, fsdp: bool) -> float:
+    """Analytic per-device HBM traffic model (the TPU memory term).
+
+    The CPU-compiled HLO's byte counts reflect CPU fusion boundaries and
+    fp32 temps — 10-100x pessimistic for TPU.  This model counts the
+    unavoidable traffic: parameter reads, optimizer state read+write,
+    activation block I/O (incl. one remat re-read), logits, and KV/state
+    cache reads for decode.  Reported alongside the parsed upper bound.
+    """
+    P = cfg.param_count()
+    tp = 16
+    dp = 16
+    chips = CHIPS
+    p_local = P / (chips if fsdp else tp)
+    toks_local = spec.seq_len * spec.global_batch / dp
+    d = cfg.d_model
+
+    if spec.kind == "train":
+        # params: fwd read + bwd read + write (bf16); opt: read+write fp32 x2
+        param_traffic = p_local * 2 * 3
+        opt_traffic = (P / chips) * 8 * 2          # ZeRO-1 over all chips
+        # activations: block in/out + mixer/ffn intermediates, bf16,
+        # fwd write + bwd read + remat re-read  (~24 B/token/layer/d),
+        # sharded over TP within the dp slice
+        act_traffic = toks_local * d * cfg.n_layers * 24 / tp
+        logits = toks_local * cfg.vocab * 4 * 2 / tp
+        return param_traffic + opt_traffic + act_traffic + logits
+    if spec.kind == "prefill":
+        param_traffic = p_local * 2
+        act_traffic = toks_local * d * cfg.n_layers * 8 / tp
+        cache_write = _cache_bytes(cfg, spec) / chips
+        return param_traffic + act_traffic + cache_write
+    # decode: whole param set + whole cache read per token
+    param_traffic = p_local * 2
+    cache_read = _cache_bytes(cfg, spec) / chips
+    return param_traffic + cache_read
+
+
+def _cache_bytes(cfg, spec) -> float:
+    """Global KV/state cache size for this cell (bf16 KV, fp32 states)."""
+    pat = cfg.pattern()
+    reps = cfg.reps
+    B, S = spec.global_batch, spec.seq_len
+    total = 0.0
+    for mixer, _ in pat:
+        if mixer == "attention":
+            total += reps * B * S * cfg.n_kv_heads * cfg.head_dim * 2 * 2
+        elif mixer == "mamba":
+            total += reps * B * 2 * cfg.d_model * 16 * 4
+        else:  # rwkv6
+            total += reps * B * (cfg.d_model // 64) * 64 * 64 * 4
+    return total
+
+
+def bottleneck_comment(arch, shape, dom, terms, coll_kinds):
+    worst_coll = max(coll_kinds, key=coll_kinds.get) if coll_kinds else "none"
+    hints = {
+        "compute": ("compute-bound: raise per-chip utilization — bigger "
+                    "per-device matmul tiles (less TP), or cut remat"),
+        "memory": ("memory-bound: fuse/keep activations resident, reduce "
+                   "fp32 intermediates, shrink scan-carried buffers"),
+        "collective": (f"collective-bound (mostly {worst_coll}): reshard to "
+                       "kill the dominant collective, or overlap it with "
+                       "compute via latency-hiding"),
+    }
+    return hints[dom]
+
+
+def analyze_cell(arch: str, shape: str, tag: str = "baseline",
+                 reuse_hlo: bool = True) -> dict:
+    from benchmarks.hlo_analysis import analyze
+    from repro.configs import SHAPES, get_config
+    from repro.parallel.sharding import policy_for
+
+    hlo_path = f"results/hlo/{arch}.{shape}.{tag}.hlo"
+    os.makedirs("results/hlo", exist_ok=True)
+    compile_s = None
+    if not (reuse_hlo and os.path.exists(hlo_path)):
+        from repro.launch.dryrun import run_cell
+        res = run_cell(arch, shape, multi_pod=False, save_hlo=hlo_path)
+        compile_s = res["compile_s"]
+    with open(hlo_path) as f:
+        hlo = f.read()
+    a = analyze(hlo)
+
+    cfg = get_config(arch)
+    spec = SHAPES[shape]
+    fsdp = policy_for(arch).fsdp
+    mf = model_flops(spec.kind, cfg.active_param_count(), spec.seq_len,
+                     spec.global_batch)
+    mem_bytes = analytic_memory_bytes(cfg, spec, fsdp)
+    t_comp = a["flops_per_device"] / PEAK_FLOPS
+    t_mem = mem_bytes / HBM_BW
+    t_mem_upper = a["bytes_per_device"] / HBM_BW
+    t_coll = a["collective_bytes_per_device"] / LINK_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    ratio = mf / max(a["flops_per_device"] * CHIPS, 1.0)
+    # roofline fraction: ideal time of the useful work over the dominant
+    # term's time — the score this report optimizes.
+    ideal = max(mf / CHIPS / PEAK_FLOPS, mem_bytes / HBM_BW
+                if spec.kind == "decode" else 0.0)
+    frac = ideal / max(terms[dom], 1e-12)
+
+    out = {
+        "tag": tag,
+        "arch": arch,
+        "shape": shape,
+        "kind": spec.kind,
+        "flops_per_device": a["flops_per_device"],
+        "bytes_per_device_upper": a["bytes_per_device"],
+        "mem_bytes_analytic": mem_bytes,
+        "coll_bytes_per_device": a["collective_bytes_per_device"],
+        "coll_by_kind": a["collective_by_kind"],
+        "t_compute_s": t_comp,
+        "t_memory_s": t_mem,
+        "t_memory_upper_s": t_mem_upper,
+        "t_collective_s": t_coll,
+        "dominant": dom,
+        "model_flops": mf,
+        "useful_ratio": ratio,
+        "roofline_fraction": frac,
+        "compile_s": compile_s,
+        "comment": bottleneck_comment(arch, shape, dom, terms,
+                                      a["collective_by_kind"]),
+    }
+    return out
+
+
+def cmd_run(only_arch: str = "", tag: str = "baseline") -> None:
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=512")
+    from repro.configs import ARCH_IDS, cells
+    os.makedirs("results", exist_ok=True)
+    done = set()
+    if os.path.exists(OUT):
+        with open(OUT) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    done.add((r["arch"], r["shape"], r.get("tag", "baseline")))
+                except json.JSONDecodeError:
+                    pass
+    for arch in ARCH_IDS:
+        if only_arch and arch != only_arch:
+            continue
+        for shape, _ in cells(arch):
+            if (arch, shape, tag) in done:
+                print(f"skip {arch} {shape}", flush=True)
+                continue
+            t0 = time.time()
+            try:
+                r = analyze_cell(arch, shape, tag)
+            except Exception as e:  # noqa: BLE001
+                r = {"tag": tag, "arch": arch, "shape": shape,
+                     "error": f"{type(e).__name__}: {e}"}
+            with open(OUT, "a") as f:
+                f.write(json.dumps(r) + "\n")
+            print(f"{arch} {shape} [{tag}] dom={r.get('dominant')} "
+                  f"frac={r.get('roofline_fraction', 0):.3f} "
+                  f"({time.time()-t0:.0f}s)", flush=True)
+
+
+def cmd_table(tag: str = "baseline") -> None:
+    rows = []
+    with open(OUT) as f:
+        for line in f:
+            r = json.loads(line)
+            if r.get("tag", "baseline") == tag and "error" not in r:
+                rows.append(r)
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| MODEL_FLOPS | useful ratio | roofline frac |")
+    print(hdr)
+    print("|" + "---|" * 9)
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
+        print(f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.4f} "
+              f"| {r['t_memory_s']:.4f} | {r['t_collective_s']:.4f} "
+              f"| **{r['dominant']}** | {r['model_flops']:.3e} "
+              f"| {r['useful_ratio']:.3f} | {r['roofline_fraction']:.3f} |")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("cmd", choices=["run", "table", "cell"])
+    ap.add_argument("--only-arch", default="")
+    ap.add_argument("--arch", default="")
+    ap.add_argument("--shape", default="")
+    ap.add_argument("--tag", default="baseline")
+    args = ap.parse_args()
+    if args.cmd == "run":
+        cmd_run(args.only_arch, args.tag)
+    elif args.cmd == "table":
+        cmd_table(args.tag)
+    else:
+        os.environ.setdefault("XLA_FLAGS",
+                              "--xla_force_host_platform_device_count=512")
+        r = analyze_cell(args.arch, args.shape, args.tag)
+        print(json.dumps(r, indent=2))
+        with open(OUT, "a") as f:
+            f.write(json.dumps(r) + "\n")
+
+
+if __name__ == "__main__":
+    main()

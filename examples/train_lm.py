@@ -1,0 +1,25 @@
+"""End-to-end training example: ~smoke-scale model, few hundred steps.
+
+Thin wrapper over the production driver (launch/train.py) with settings
+that train a visible loss curve on one CPU core — the same code lowers to
+the 512-chip production mesh (proven by the dry-run).
+
+  PYTHONPATH=src python examples/train_lm.py
+"""
+import subprocess
+import sys
+import tempfile
+
+
+def main() -> None:
+    with tempfile.TemporaryDirectory() as ckpt:
+        subprocess.run(
+            [sys.executable, "-m", "repro.launch.train",
+             "--arch", "llama3_8b", "--smoke",
+             "--steps", "200", "--global-batch", "8", "--seq-len", "64",
+             "--ckpt-dir", ckpt, "--ckpt-every", "50", "--log-every", "20"],
+            check=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,151 @@
+"""Checkpointing: atomic, mesh-agnostic, retention-managed, async-capable.
+
+Fault-tolerance contract (DESIGN.md §6):
+* **Atomicity** — writes land in ``<dir>/tmp.<step>`` and are renamed to
+  ``<dir>/step_<k>`` only after every leaf + manifest is flushed; a crash
+  mid-save never corrupts the latest checkpoint.
+* **Mesh-agnostic restore** — leaves are saved as full (unsharded) numpy
+  arrays together with their pytree structure; ``restore`` re-device_puts
+  them under *any* mesh/sharding tree, so a job can restart on a different
+  pod count (elastic rescale) or topology.
+* **Retention** — keep the newest ``keep`` checkpoints; older ones are
+  deleted only after a newer one is durable.
+* **Async** — ``save_async`` snapshots to host memory synchronously (cheap)
+  and writes in a daemon thread, overlapping I/O with the next train steps.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._lock = threading.Lock()
+        self._pending: List[threading.Thread] = []
+
+    # -- discovery ------------------------------------------------------------
+
+    def steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            m = _STEP_RE.match(name)
+            if m and os.path.exists(os.path.join(self.dir, name, "MANIFEST.json")):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    # -- save ------------------------------------------------------------------
+
+    def save(self, step: int, tree: PyTree, extra: Optional[Dict] = None
+             ) -> str:
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+        return self._write(step, host_tree, extra or {})
+
+    def save_async(self, step: int, tree: PyTree,
+                   extra: Optional[Dict] = None) -> threading.Thread:
+        """Snapshot synchronously, write in the background."""
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+        t = threading.Thread(target=self._write,
+                             args=(step, host_tree, extra or {}), daemon=True)
+        t.start()
+        self._pending.append(t)
+        return t
+
+    def wait(self):
+        for t in self._pending:
+            t.join()
+        self._pending.clear()
+
+    def _write(self, step: int, host_tree: PyTree, extra: Dict) -> str:
+        with self._lock:
+            tmp = os.path.join(self.dir, f"tmp.{step}.{os.getpid()}")
+            final = os.path.join(self.dir, f"step_{step}")
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            leaves, treedef = jax.tree.flatten(host_tree)
+            for i, leaf in enumerate(leaves):
+                arr = np.asarray(leaf)
+                if arr.dtype.name == "bfloat16":
+                    np.save(os.path.join(tmp, f"leaf_{i}.npy"),
+                            arr.view(np.uint16))
+                    dtype_tag = "bfloat16"
+                else:
+                    np.save(os.path.join(tmp, f"leaf_{i}.npy"), arr)
+                    dtype_tag = arr.dtype.name
+                with open(os.path.join(tmp, f"leaf_{i}.meta"), "w") as f:
+                    f.write(dtype_tag)
+            manifest = {
+                "step": step,
+                "n_leaves": len(leaves),
+                "treedef": str(treedef),
+                "time": time.time(),
+                "extra": extra,
+            }
+            with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)            # atomic publish
+            self._gc()
+            return final
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
+                          ignore_errors=True)
+
+    # -- restore -----------------------------------------------------------------
+
+    def restore(self, step: int, abstract_tree: PyTree,
+                shardings: Optional[PyTree] = None) -> PyTree:
+        """Load leaves and place them under ``shardings`` (any mesh)."""
+        d = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(d, "MANIFEST.json")) as f:
+            manifest = json.load(f)
+        leaves_abs, treedef = jax.tree.flatten(abstract_tree)
+        assert manifest["n_leaves"] == len(leaves_abs), \
+            "checkpoint/model structure mismatch"
+        shd_leaves = (jax.tree.flatten(shardings)[0]
+                      if shardings is not None else [None] * len(leaves_abs))
+        out = []
+        for i, (ab, shd) in enumerate(zip(leaves_abs, shd_leaves)):
+            arr = np.load(os.path.join(d, f"leaf_{i}.npy"))
+            with open(os.path.join(d, f"leaf_{i}.meta")) as f:
+                tag = f.read().strip()
+            if tag == "bfloat16":
+                import ml_dtypes
+                arr = arr.view(ml_dtypes.bfloat16)
+            if shd is not None:
+                out.append(jax.device_put(arr, shd))
+            else:
+                out.append(jax.numpy.asarray(arr))
+        return jax.tree.unflatten(treedef, out)
+
+    def restore_latest(self, abstract_tree: PyTree,
+                       shardings: Optional[PyTree] = None
+                       ) -> Tuple[Optional[int], Optional[PyTree]]:
+        step = self.latest_step()
+        if step is None:
+            return None, None
+        return step, self.restore(step, abstract_tree, shardings)

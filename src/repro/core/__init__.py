@@ -1,0 +1,17 @@
+"""Core: the paper's Foresight skiplist, JAX-native."""
+from repro.core.skiplist import (KEY_MAX, KEY_MIN, OP_DELETE, OP_INSERT,
+                                 OP_READ, SearchResult, SkipListState,
+                                 apply_ops, build, check_foresight_invariant,
+                                 contains, delete, empty, insert,
+                                 sample_heights, search, to_sorted_keys)
+from repro.core.validated import (PredValidation, search_validated,
+                                  validate_preds)
+from repro.core.versioned import IndexView, VersionedIndex
+
+__all__ = [
+    "KEY_MAX", "KEY_MIN", "OP_DELETE", "OP_INSERT", "OP_READ",
+    "SearchResult", "SkipListState", "apply_ops", "build",
+    "check_foresight_invariant", "contains", "delete", "empty", "insert",
+    "sample_heights", "search", "to_sorted_keys", "search_validated",
+    "validate_preds", "PredValidation", "IndexView", "VersionedIndex",
+]

@@ -1,0 +1,594 @@
+"""Foresight skiplist — functional, structure-of-arrays, JAX-native.
+
+This is the paper's core contribution adapted to TPU (see DESIGN.md §2):
+
+* The skiplist lives in HBM as structure-of-arrays.  A traversal step is a
+  *dependent gather*; the chain of dependent gathers is the TPU analogue of the
+  paper's cache-miss chain.
+* **Base** variant stores ``nxt[L, cap]`` pointers only: each traversal step
+  gathers the successor pointer, then (dependently) gathers that successor's
+  key — two serialized HBM round-trips per step.
+* **Foresight** variant stores ``fused[L, cap, 2]`` records where
+  ``fused[l, i] = (next_ptr, next_key)`` interleaved in the minor dimension:
+  one gather per step fetches both.  The pair is always written together —
+  the functional analogue of the paper's 16-byte atomic SIMD store.
+* "Concurrency" is batched, level-synchronous vectorized traversal: a batch of
+  queries advances in lock-step (lanes = the paper's threads).  Updates are
+  functional (``lax.scan`` of linearized single ops → a new version).
+
+Node 0 is the head sentinel (key = KEY_MIN) and node 1 the tail sentinel
+(key = KEY_MAX), so every ``next`` pointer is always valid and the traversal
+loop is branch-free.  Keys are int32 in the open interval (KEY_MIN, KEY_MAX).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+KEY_MIN = jnp.int32(-(2**31))          # head sentinel key (-inf)
+KEY_MAX = jnp.int32(2**31 - 1)         # tail sentinel key (+inf)
+HEAD = 0                               # node id of head sentinel
+TAIL = 1                               # node id of tail sentinel
+NULL_VAL = jnp.int32(-1)
+
+
+class SkipListState(NamedTuple):
+    """Functional skiplist state (a pytree).
+
+    Exactly one of ``nxt`` (base) / ``fused`` (foresight) is set, so the two
+    variants are memory-fair: base keeps no successor keys at all.
+    """
+
+    keys: jax.Array          # [cap] int32 — node key (KEY_MAX for unused slots)
+    vals: jax.Array          # [cap] int32 — payload
+    height: jax.Array        # [cap] int32 — tower height (sentinels = L)
+    nxt: Optional[jax.Array]    # [L, cap] int32 — base variant only
+    fused: Optional[jax.Array]  # [L, cap, 2] int32 — foresight variant only
+    n: jax.Array             # [] int32 — live element count (excl. sentinels)
+    free_top: jax.Array      # [] int32 — freelist stack top (== #free slots)
+    free_list: jax.Array     # [cap] int32 — stack of recycled node ids
+    bump: jax.Array          # [] int32 — next never-used slot (bump allocator)
+    rng: jax.Array           # [2] uint32 — jax PRNG key for tower heights
+
+    @property
+    def levels(self) -> int:
+        arr = self.nxt if self.nxt is not None else self.fused
+        return arr.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.keys.shape[0]
+
+    @property
+    def foresight(self) -> bool:
+        return self.fused is not None
+
+
+# ---------------------------------------------------------------------------
+# Construction
+# ---------------------------------------------------------------------------
+
+def empty(capacity: int, levels: int = 20, *, foresight: bool = True,
+          seed: int = 0) -> SkipListState:
+    """An empty skiplist with room for ``capacity - 2`` elements."""
+    keys = jnp.full((capacity,), KEY_MAX, jnp.int32)
+    keys = keys.at[HEAD].set(KEY_MIN)
+    vals = jnp.full((capacity,), NULL_VAL, jnp.int32)
+    height = jnp.zeros((capacity,), jnp.int32)
+    height = height.at[HEAD].set(levels).at[TAIL].set(levels)
+    nxt = fused = None
+    if foresight:
+        fused = jnp.zeros((levels, capacity, 2), jnp.int32)
+        fused = fused.at[:, HEAD, 0].set(TAIL)
+        fused = fused.at[:, HEAD, 1].set(KEY_MAX)
+        fused = fused.at[:, TAIL, 0].set(TAIL)
+        fused = fused.at[:, TAIL, 1].set(KEY_MAX)
+    else:
+        nxt = jnp.zeros((levels, capacity), jnp.int32)
+        nxt = nxt.at[:, HEAD].set(TAIL)
+        nxt = nxt.at[:, TAIL].set(TAIL)
+    return SkipListState(
+        keys=keys, vals=vals, height=height, nxt=nxt, fused=fused,
+        n=jnp.int32(0), free_top=jnp.int32(0),
+        free_list=jnp.zeros((capacity,), jnp.int32), bump=jnp.int32(2),
+        rng=jax.random.PRNGKey(seed),
+    )
+
+
+def sample_heights(rng: jax.Array, shape, levels: int) -> jax.Array:
+    """Geometric(1/2) tower heights in [1, levels] (Synchrobench's G(1/2))."""
+    bits = jax.random.bits(rng, shape, jnp.uint32)
+    # height = 1 + number of trailing one-bits, capped at levels.
+    inv = ~bits
+    ctz = _count_trailing_zeros(inv)
+    return jnp.minimum(ctz.astype(jnp.int32) + 1, levels)
+
+
+def _count_trailing_zeros(x: jax.Array) -> jax.Array:
+    """ctz for uint32 (32 for x == 0)."""
+    lsb = x & (~x + jnp.uint32(1))
+    safe = jnp.where(lsb == 0, jnp.uint32(1), lsb)
+    expo = (safe.view(jnp.float32) if False else None)
+    # Portable integer log2 of a power of two via float conversion.
+    f = safe.astype(jnp.float64) if jax.config.read("jax_enable_x64") else safe.astype(jnp.float32)
+    ctz = jnp.log2(f).astype(jnp.int32)
+    return jnp.where(x == 0, jnp.int32(32), ctz)
+
+
+@functools.partial(jax.jit, static_argnames=("capacity", "levels", "foresight"))
+def build(keys: jax.Array, vals: jax.Array, *, capacity: int,
+          levels: int = 20, foresight: bool = True,
+          seed: int = 0) -> SkipListState:
+    """Bulk-build from sorted, unique int32 keys (vectorized; no python loop).
+
+    Elements get node ids ``2 .. n+1`` in key order.  For every level ``l``,
+    the nodes whose tower reaches ``l`` form the linked list at that level;
+    the successor of position ``i`` is the next position ``j > i`` whose
+    tower also reaches ``l`` (computed with a reversed cumulative-min).
+    """
+    n = keys.shape[0]
+    assert n + 2 <= capacity, "capacity must exceed n + 2 sentinels"
+    st = empty(capacity, levels, foresight=foresight, seed=seed)
+    rng, sub = jax.random.split(st.rng)
+    heights = sample_heights(sub, (n,), levels)
+
+    ids = jnp.arange(2, n + 2, dtype=jnp.int32)          # node id per position
+    new_keys = st.keys.at[ids].set(keys.astype(jnp.int32))
+    new_vals = st.vals.at[ids].set(vals.astype(jnp.int32))
+    new_height = st.height.at[ids].set(heights)
+
+    # succ_pos[l, i] = first position j >= i with heights[j] > l (else n).
+    lvl = jnp.arange(levels, dtype=jnp.int32)[:, None]    # [L, 1]
+    reach = heights[None, :] > lvl                        # [L, n]
+    pos = jnp.arange(n, dtype=jnp.int32)[None, :]
+    cand = jnp.where(reach, pos, n)
+    suffix_min = lax.cummin(cand[:, ::-1], axis=1)[:, ::-1]   # [L, n]
+
+    # Successor *of node at position i* on level l = next reaching pos > i.
+    succ_pos = jnp.concatenate(
+        [suffix_min[:, 1:], jnp.full((levels, 1), n, jnp.int32)], axis=1)
+    succ_id = jnp.where(succ_pos >= n, TAIL, succ_pos + 2).astype(jnp.int32)
+    succ_key = jnp.where(succ_pos >= n, KEY_MAX,
+                         keys[jnp.clip(succ_pos, 0, n - 1)]).astype(jnp.int32)
+
+    # Head successor on level l = first reaching position (suffix_min[:, 0]).
+    first_pos = suffix_min[:, 0] if n > 0 else jnp.full((levels,), n, jnp.int32)
+    head_id = jnp.where(first_pos >= n, TAIL, first_pos + 2).astype(jnp.int32)
+    head_key = jnp.where(first_pos >= n, KEY_MAX,
+                         keys[jnp.clip(first_pos, 0, n - 1)]).astype(jnp.int32)
+
+    mask = reach                                          # only link real levels
+    if foresight:
+        fused = st.fused
+        cur = fused[:, ids, :]
+        upd = jnp.stack([jnp.where(mask, succ_id, cur[..., 0]),
+                         jnp.where(mask, succ_key, cur[..., 1])], axis=-1)
+        fused = fused.at[:, ids, :].set(upd)
+        fused = fused.at[:, HEAD, 0].set(head_id)
+        fused = fused.at[:, HEAD, 1].set(head_key)
+        nxt = None
+    else:
+        nxt = st.nxt
+        cur = nxt[:, ids]
+        nxt = nxt.at[:, ids].set(jnp.where(mask, succ_id, cur))
+        nxt = nxt.at[:, HEAD].set(head_id)
+        fused = None
+
+    return st._replace(keys=new_keys, vals=new_vals, height=new_height,
+                       nxt=nxt, fused=fused, n=jnp.int32(n),
+                       bump=jnp.int32(n + 2), rng=rng)
+
+
+# ---------------------------------------------------------------------------
+# Gather helpers — the heart of the base-vs-foresight distinction
+# ---------------------------------------------------------------------------
+
+def _gather_fused(fused: jax.Array, lvl: jax.Array, x: jax.Array):
+    """ONE gather: fetch (next_ptr, next_key) for nodes ``x`` at levels ``lvl``."""
+    cap = fused.shape[1]
+    flat = fused.reshape((-1, 2))
+    rec = jnp.take(flat, lvl * cap + x, axis=0)           # [B, 2]
+    return rec[..., 0], rec[..., 1]
+
+
+def _gather_base(nxt: jax.Array, keys: jax.Array, lvl: jax.Array, x: jax.Array):
+    """TWO dependent gathers: fetch next_ptr, then dereference for its key."""
+    cap = nxt.shape[1]
+    ptr = jnp.take(nxt.reshape(-1), lvl * cap + x, axis=0)  # gather 1
+    fk = jnp.take(keys, ptr, axis=0)                        # gather 2 (dependent)
+    return ptr, fk
+
+
+# ---------------------------------------------------------------------------
+# Batched level-synchronous search (the paper's Algorithm 1 / 2, vectorized)
+# ---------------------------------------------------------------------------
+
+class SearchResult(NamedTuple):
+    found: jax.Array     # [B] bool
+    vals: jax.Array      # [B] int32 (NULL_VAL when absent)
+    node: jax.Array      # [B] int32 — node id with the key (TAIL when absent)
+    preds: jax.Array     # [B, L] int32 — last node visited per level
+    steps: jax.Array     # [] int32 — lock-step iterations executed
+    gathers: jax.Array   # [] int32 — dependent-gather count (arch. counter)
+
+
+def search(state: SkipListState, queries: jax.Array,
+           *, stop_level: int = 0, count_accesses: bool = False
+           ) -> SearchResult:
+    """Batched search for int32 ``queries`` [B].
+
+    Level-synchronous: every query advances right or descends once per
+    lock-step iteration.  Foresight needs ONE dependent gather per iteration;
+    base needs TWO (pointer, then pointee key).  ``preds`` records the last
+    node visited per level — the predecessors array used by updates.
+    """
+    q = queries.astype(jnp.int32)
+    B = q.shape[0]
+    L = state.levels
+    x = jnp.zeros((B,), jnp.int32)                # start at head
+    lvl = jnp.full((B,), L - 1, jnp.int32)
+    preds = jnp.zeros((B, L), jnp.int32)
+    steps = jnp.int32(0)
+    gathers = jnp.int32(0)
+
+    def cond(carry):
+        x, lvl, preds, steps, gathers = carry
+        return jnp.any(lvl >= stop_level)
+
+    def body(carry):
+        x, lvl, preds, steps, gathers = carry
+        active = lvl >= stop_level
+        safe_lvl = jnp.maximum(lvl, 0)
+        if state.foresight:
+            ptr, fk = _gather_fused(state.fused, safe_lvl, x)
+            g = jnp.int32(1)
+        else:
+            ptr, fk = _gather_base(state.nxt, state.keys, safe_lvl, x)
+            g = jnp.int32(2)
+        go_right = active & (fk < q)
+        new_x = jnp.where(go_right, ptr, x)
+        # On descend, record predecessor for the level we are leaving.
+        desc = active & ~go_right
+        preds = _scatter_rows(preds, safe_lvl, x, desc)
+        new_lvl = jnp.where(go_right, lvl, lvl - 1)
+        new_lvl = jnp.where(active, new_lvl, lvl)
+        steps = steps + 1
+        gathers = gathers + g * jnp.sum(active).astype(jnp.int32)
+        return new_x, jnp.where(active, new_lvl, lvl), preds, steps, gathers
+
+    x, lvl, preds, steps, gathers = lax.while_loop(
+        cond, body, (x, lvl, preds, steps, gathers))
+
+    # The candidate is the successor of the level-``stop_level`` predecessor.
+    if state.foresight:
+        cand, cand_key = _gather_fused(
+            state.fused, jnp.full((B,), stop_level, jnp.int32), x)
+    else:
+        cand, cand_key = _gather_base(
+            state.nxt, state.keys, jnp.full((B,), stop_level, jnp.int32), x)
+    found = cand_key == q
+    vals = jnp.where(found, jnp.take(state.vals, cand), NULL_VAL)
+    node = jnp.where(found, cand, TAIL)
+    return SearchResult(found, vals, node, preds, steps, gathers)
+
+
+def contains(state: SkipListState, queries: jax.Array) -> jax.Array:
+    return search(state, queries).found
+
+
+def effective_top_level(state: SkipListState) -> jax.Array:
+    """Highest level where the head has a real successor (+1 slack).
+
+    Starting traversals here instead of at L-1 skips the empty upper levels
+    — for n elements only ~log2(n) levels are populated (§Perf iteration 8).
+    """
+    if state.foresight:
+        head_next = state.fused[:, HEAD, 0]
+    else:
+        head_next = state.nxt[:, HEAD]
+    populated = head_next != TAIL
+    top = jnp.max(jnp.where(populated,
+                            jnp.arange(state.levels), -1))
+    return jnp.minimum(top + 1, state.levels - 1).astype(jnp.int32)
+
+
+def search_fast(state: SkipListState, queries: jax.Array
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Read-only lookup: (found [B], vals [B]).
+
+    §Perf iterations 8-9 on the paper's own data structure: vs ``search``
+    this (a) drops predecessor tracking — read paths don't need preds, and
+    the per-step [B, L] one-hot bookkeeping dominated the lock-step cost at
+    wide batches, washing out Foresight's gather saving — and (b) starts at
+    the effective top level, skipping ~L - log2(n) empty iterations.
+    """
+    q = queries.astype(jnp.int32)
+    B = q.shape[0]
+    x = jnp.zeros((B,), jnp.int32)
+    lvl = jnp.broadcast_to(effective_top_level(state), (B,))
+
+    def cond(carry):
+        return jnp.any(carry[1] >= 0)
+
+    def body(carry):
+        x, lvl = carry
+        active = lvl >= 0
+        safe_lvl = jnp.maximum(lvl, 0)
+        if state.foresight:
+            ptr, fk = _gather_fused(state.fused, safe_lvl, x)
+        else:
+            ptr, fk = _gather_base(state.nxt, state.keys, safe_lvl, x)
+        go = active & (fk < q)
+        return jnp.where(go, ptr, x), jnp.where(go | ~active, lvl, lvl - 1)
+
+    x, lvl = lax.while_loop(cond, body, (x, lvl))
+    if state.foresight:
+        cand, ck = _gather_fused(state.fused, jnp.zeros((B,), jnp.int32), x)
+    else:
+        cand, ck = _gather_base(state.nxt, state.keys,
+                                jnp.zeros((B,), jnp.int32), x)
+    found = ck == q
+    vals = jnp.where(found, jnp.take(state.vals, cand), NULL_VAL)
+    return found, vals
+
+
+def _scatter_rows(preds: jax.Array, lvl: jax.Array, x: jax.Array,
+                  mask: jax.Array) -> jax.Array:
+    """preds[b, lvl[b]] = x[b] where mask[b]."""
+    B, L = preds.shape
+    onehot = jax.nn.one_hot(lvl, L, dtype=jnp.bool_)
+    upd = mask[:, None] & onehot
+    return jnp.where(upd, x[:, None], preds)
+
+
+# ---------------------------------------------------------------------------
+# Single-element insert / delete (linearized; scanned for batches)
+# ---------------------------------------------------------------------------
+
+def _alloc(state: SkipListState) -> Tuple[SkipListState, jax.Array, jax.Array]:
+    """Pop a node id from the freelist, else bump. Returns (state, id, ok)."""
+    has_free = state.free_top > 0
+    free_id = state.free_list[jnp.maximum(state.free_top - 1, 0)]
+    bump_ok = state.bump < state.capacity
+    nid = jnp.where(has_free, free_id, state.bump)
+    ok = has_free | bump_ok
+    new_top = jnp.where(has_free, state.free_top - 1, state.free_top)
+    new_bump = jnp.where(has_free, state.bump,
+                         jnp.where(bump_ok, state.bump + 1, state.bump))
+    return state._replace(free_top=new_top, bump=new_bump), nid, ok
+
+
+def insert(state: SkipListState, key: jax.Array, val: jax.Array
+           ) -> Tuple[SkipListState, jax.Array]:
+    """Insert (upsert) a single key. Returns (state, inserted_new: bool).
+
+    Foresight maintenance mirrors the paper exactly: when predecessor ``p``'s
+    successor at level ``l`` changes to the new node, we write the pair
+    ``(new_id, key)`` into ``p``'s fused record *together* (the SIMD-store
+    analogue), and the new node's fused record inherits ``p``'s old pair.
+    """
+    key = key.astype(jnp.int32)
+    res = search(state, key[None])
+    found = res.found[0]
+    preds = res.preds[0]                                  # [L]
+    L = state.levels
+
+    # Upsert path: key already present -> overwrite value.
+    upsert_vals = state.vals.at[res.node[0]].set(
+        jnp.where(found, val.astype(jnp.int32), state.vals[res.node[0]]))
+
+    st, nid, ok = _alloc(state)
+    rng, sub = jax.random.split(st.rng)
+    h = sample_heights(sub, (), st.levels)
+    do = ok & ~found
+
+    lvls = jnp.arange(L, dtype=jnp.int32)
+    link = do & (lvls < h)                                # [L] levels to splice
+
+    if state.foresight:
+        fused = st.fused
+        old = fused[lvls, preds, :]                       # [L, 2] preds' pairs
+        # New node's pair per level = predecessor's old pair (succ ptr + key).
+        new_pair = jnp.where(link[:, None], old,
+                             fused[lvls, jnp.full((L,), nid), :])
+        fused = fused.at[lvls, jnp.full((L,), nid, jnp.int32), :].set(new_pair)
+        # Predecessors' pair = (new node, key) — written together.
+        pred_pair = jnp.stack(
+            [jnp.where(link, nid, old[:, 0]),
+             jnp.where(link, key, old[:, 1])], axis=-1)
+        fused = fused.at[lvls, preds, :].set(pred_pair)
+        nxt = None
+    else:
+        nxt = st.nxt
+        old_ptr = nxt[lvls, preds]
+        new_ptr = jnp.where(link, old_ptr, nxt[lvls, jnp.full((L,), nid)])
+        nxt = nxt.at[lvls, jnp.full((L,), nid, jnp.int32)].set(new_ptr)
+        nxt = nxt.at[lvls, preds].set(jnp.where(link, nid, old_ptr))
+        fused = None
+
+    keys = st.keys.at[nid].set(jnp.where(do, key, st.keys[nid]))
+    vals = upsert_vals.at[nid].set(jnp.where(do, val.astype(jnp.int32),
+                                             upsert_vals[nid]))
+    height = st.height.at[nid].set(jnp.where(do, h, st.height[nid]))
+    n = st.n + jnp.where(do, 1, 0).astype(jnp.int32)
+
+    # If we did not insert, roll back the allocation.
+    st2 = st._replace(keys=keys, vals=vals, height=height, nxt=nxt,
+                      fused=fused, n=n, rng=rng)
+    st2 = lax.cond(do, lambda s: s,
+                   lambda s: s._replace(free_top=state.free_top,
+                                        bump=state.bump), st2)
+    return st2, do
+
+
+def delete(state: SkipListState, key: jax.Array
+           ) -> Tuple[SkipListState, jax.Array]:
+    """Delete a single key. Returns (state, deleted: bool).
+
+    Splice-out rewrites each predecessor's fused pair to the deleted node's
+    pair at that level (again pair-at-once).  The slot is pushed on the
+    freelist; its key/height stay intact until reuse — the versioned-world
+    analogue of epoch-based reclamation (see DESIGN.md §8).
+    """
+    key = key.astype(jnp.int32)
+    res = search(state, key[None])
+    found = res.found[0]
+    d = res.node[0]
+    preds = res.preds[0]
+    L = state.levels
+    lvls = jnp.arange(L, dtype=jnp.int32)
+    h = state.height[d]
+    link = found & (lvls < h)
+
+    if state.foresight:
+        fused = state.fused
+        d_pair = fused[lvls, jnp.full((L,), d), :]        # node d's own pairs
+        old = fused[lvls, preds, :]
+        pred_pair = jnp.where(link[:, None], d_pair, old)
+        fused = fused.at[lvls, preds, :].set(pred_pair)
+        nxt = None
+    else:
+        nxt = state.nxt
+        d_ptr = nxt[lvls, jnp.full((L,), d)]
+        old = nxt[lvls, preds]
+        nxt = nxt.at[lvls, preds].set(jnp.where(link, d_ptr, old))
+        fused = None
+
+    free_list = state.free_list.at[state.free_top].set(
+        jnp.where(found, d, state.free_list[state.free_top]))
+    free_top = state.free_top + jnp.where(found, 1, 0).astype(jnp.int32)
+    keys = state.keys.at[d].set(jnp.where(found, KEY_MAX, state.keys[d]))
+    height = state.height.at[d].set(jnp.where(found, 0, state.height[d]))
+    n = state.n - jnp.where(found, 1, 0).astype(jnp.int32)
+    return state._replace(keys=keys, height=height, nxt=nxt, fused=fused,
+                          n=n, free_list=free_list, free_top=free_top), found
+
+
+# ---------------------------------------------------------------------------
+# Batched (linearized) update application — the functional concurrency model
+# ---------------------------------------------------------------------------
+
+OP_READ, OP_INSERT, OP_DELETE = 0, 1, 2
+
+
+def apply_ops(state: SkipListState, op_types: jax.Array, keys: jax.Array,
+              vals: jax.Array) -> Tuple[SkipListState, jax.Array]:
+    """Apply a linearized batch of mixed ops via ``lax.scan``.
+
+    Returns (new_state, results[B]) where results is the op outcome
+    (found / inserted / deleted as int32 0/1).  This is the functional
+    analogue of a concurrent update window: the batch linearizes exactly like
+    the paper's concurrent operations do.
+    """
+
+    def step(st, op):
+        t, k, v = op
+        def do_read(s):
+            r = search(s, k[None])
+            return s, r.found[0].astype(jnp.int32)
+        def do_ins(s):
+            s2, okk = insert(s, k, v)
+            return s2, okk.astype(jnp.int32)
+        def do_del(s):
+            s2, okk = delete(s, k)
+            return s2, okk.astype(jnp.int32)
+        return lax.switch(t, [do_read, do_ins, do_del], st)
+
+    return lax.scan(step, state,
+                    (op_types.astype(jnp.int32), keys.astype(jnp.int32),
+                     vals.astype(jnp.int32)))
+
+
+# ---------------------------------------------------------------------------
+# Introspection / invariants (used by tests and benchmarks)
+# ---------------------------------------------------------------------------
+
+def check_foresight_invariant(state: SkipListState) -> jax.Array:
+    """True iff every live fused record satisfies next_key == keys[next_ptr].
+
+    This is THE data-structure invariant Foresight adds (paper §3.1): a
+    foreseen key must match the actual key of the node the pointer references.
+    """
+    assert state.foresight
+    L, cap, _ = state.fused.shape
+    ptr = state.fused[..., 0]
+    fk = state.fused[..., 1]
+    actual = state.keys[ptr.reshape(-1)].reshape(L, cap)
+    lvls = jnp.arange(L, dtype=jnp.int32)[:, None]
+    live = (state.height[None, :] > lvls)
+    live = live.at[:, HEAD].set(True)
+    ok = jnp.where(live, fk == actual, True)
+    return jnp.all(ok)
+
+
+def to_sorted_keys(state: SkipListState, max_n: int) -> jax.Array:
+    """Walk level 0 and return keys in order (KEY_MAX padded), for tests."""
+    def body(i, carry):
+        x, out = carry
+        if state.foresight:
+            ptr, fk = _gather_fused(state.fused, jnp.zeros((1,), jnp.int32),
+                                    x[None])
+        else:
+            ptr, fk = _gather_base(state.nxt, state.keys,
+                                   jnp.zeros((1,), jnp.int32), x[None])
+        out = out.at[i].set(fk[0])
+        return ptr[0], out
+
+    out = jnp.full((max_n,), KEY_MAX, jnp.int32)
+    _, out = lax.fori_loop(0, max_n, body, (jnp.int32(HEAD), out))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Range queries — the skiplist's signature advantage over hash indexes
+# ---------------------------------------------------------------------------
+
+def range_scan(state: SkipListState, lo: jax.Array, hi: jax.Array,
+               max_out: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Collect up to ``max_out`` (key, val) pairs with lo <= key < hi.
+
+    Positions via a (batched, foresight-accelerated) search for ``lo``, then
+    walks level 0.  Returns (keys [max_out], vals [max_out], count []);
+    unused slots hold KEY_MAX / NULL_VAL.  This is the ordered-scan primitive
+    behind the data pipeline's shard assignment and the page table's
+    range-release — the workload class the paper cites skiplists for.
+    """
+    lo = lo.astype(jnp.int32)
+    hi = hi.astype(jnp.int32)
+    found, _ = (None, None)
+    if state.foresight:
+        res = search_fast(state, lo[None])
+    else:
+        res = search_fast(state, lo[None])
+    # search_fast gives found/val; we need the predecessor: re-derive the
+    # entry node via a dedicated positioning pass (cheap single query).
+    r = search(state, lo[None])
+    x = r.preds[0, 0]                         # level-0 predecessor of lo
+
+    keys_out = jnp.full((max_out,), KEY_MAX, jnp.int32)
+    vals_out = jnp.full((max_out,), NULL_VAL, jnp.int32)
+
+    def body(i, carry):
+        x, keys_out, vals_out, count = carry
+        if state.foresight:
+            ptr, k = _gather_fused(state.fused, jnp.zeros((1,), jnp.int32),
+                                   x[None])
+        else:
+            ptr, k = _gather_base(state.nxt, state.keys,
+                                  jnp.zeros((1,), jnp.int32), x[None])
+        ptr, k = ptr[0], k[0]
+        take = (k >= lo) & (k < hi)
+        keys_out = keys_out.at[i].set(jnp.where(take, k, keys_out[i]))
+        vals_out = vals_out.at[i].set(
+            jnp.where(take, state.vals[ptr], vals_out[i]))
+        count = count + jnp.where(take, 1, 0).astype(jnp.int32)
+        nxt_x = jnp.where(take, ptr, x)       # stop advancing past hi
+        return nxt_x, keys_out, vals_out, count
+
+    x, keys_out, vals_out, count = lax.fori_loop(
+        0, max_out, body, (x, keys_out, vals_out, jnp.int32(0)))
+    return keys_out, vals_out, count

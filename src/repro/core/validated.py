@@ -1,0 +1,124 @@
+"""Optimistic Validation — the paper's §3.2/§3.3 adapted to versioned JAX.
+
+In the functional world a *published* skiplist version is internally
+consistent, so plain foresight search is safe.  The paper's hazards (Reckless
+Advance / Premature Descent) reappear when queries are pipelined against a
+**stale or mixed view**: e.g. a reader holds version-t fused records while the
+authoritative key table has already moved to version t+1 (double-buffered
+index, `versioned.py`).  Then a foreseen key may disagree with the actual key
+of the node its pointer references — exactly the torn ``(next, next_key)``
+read of the paper.
+
+``search_validated`` is the paper's Algorithm 3, vectorized:
+
+* levels >= 1: advance on the foreseen key, but *validate* against the
+  authoritative key of the pointee before committing; on validation failure,
+  descend (the paper's ``break``).
+* level 0 is traversed WITHOUT foresight (pointer lane only + authoritative
+  keys) — Premature Descent at the bottom level would be a correctness bug,
+  so foresight is simply not used there (paper §3.2).
+
+The correctness contract (property-tested): for **arbitrary** corruption of
+the foreseen-key lane, ``search_validated`` returns exactly what a base
+search on the authoritative state returns.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.skiplist import (KEY_MAX, NULL_VAL, SearchResult,
+                                 SkipListState, _scatter_rows)
+
+
+def search_validated(fused: jax.Array, auth_keys: jax.Array, vals: jax.Array,
+                     queries: jax.Array) -> SearchResult:
+    """Algorithm 3 (Optimistic Validation), batched & level-synchronous.
+
+    ``fused`` may carry stale/corrupt foreseen keys; ``auth_keys`` is the
+    authoritative key table (pointer lanes of ``fused`` must be a valid
+    linked structure over ``auth_keys`` — the paper's setting, where pointers
+    always reference real nodes but foreseen keys may be torn).
+    """
+    q = queries.astype(jnp.int32)
+    B = q.shape[0]
+    L, cap, _ = fused.shape
+    flat = fused.reshape((-1, 2))
+
+    x = jnp.zeros((B,), jnp.int32)
+    lvl = jnp.full((B,), L - 1, jnp.int32)
+    preds = jnp.zeros((B, L), jnp.int32)
+    steps = jnp.int32(0)
+    gathers = jnp.int32(0)
+
+    def cond(carry):
+        _, lvl, _, _, _ = carry
+        return jnp.any(lvl >= 0)
+
+    def body(carry):
+        x, lvl, preds, steps, gathers = carry
+        active = lvl >= 0
+        at0 = lvl == 0
+        safe_lvl = jnp.maximum(lvl, 0)
+        rec = jnp.take(flat, safe_lvl * cap + x, axis=0)
+        ptr, fk = rec[..., 0], rec[..., 1]
+        real = jnp.take(auth_keys, ptr, axis=0)           # validation gather
+        # Levels >= 1: optimistic advance + validation (Alg. 3 lines 4-9).
+        want = fk < q
+        valid = real < q
+        go_upper = active & ~at0 & want & valid
+        # Level 0: foresight unused — decide on the authoritative key only.
+        go_l0 = active & at0 & valid
+        go_right = go_upper | go_l0
+        new_x = jnp.where(go_right, ptr, x)
+        desc = active & ~go_right
+        preds = _scatter_rows(preds, safe_lvl, x, desc)
+        new_lvl = jnp.where(go_right | ~active, lvl, lvl - 1)
+        steps = steps + 1
+        # Foresight gather (1) + validation/base gather (1) for active lanes.
+        gathers = gathers + 2 * jnp.sum(active).astype(jnp.int32)
+        return new_x, new_lvl, preds, steps, gathers
+
+    x, lvl, preds, steps, gathers = lax.while_loop(
+        cond, body, (x, lvl, preds, steps, gathers))
+
+    cand = jnp.take(flat, x, axis=0)[..., 0]              # level-0 successor
+    cand_key = jnp.take(auth_keys, cand, axis=0)
+    found = cand_key == q
+    out_vals = jnp.where(found, jnp.take(vals, cand), NULL_VAL)
+    node = jnp.where(found, cand, 1)
+    return SearchResult(found, out_vals, node, preds, steps, gathers)
+
+
+class PredValidation(NamedTuple):
+    ok: jax.Array          # [B] bool — all levels consistent
+    bad_level: jax.Array   # [B] int32 — lowest failing level (or -1)
+
+
+def validate_preds(fused: jax.Array, auth_keys: jax.Array, preds: jax.Array,
+                   heights: jax.Array, queries: jax.Array) -> PredValidation:
+    """Post-search predecessor/successor validation for modifying ops.
+
+    Mirrors the paper's added criterion for the Optimistic/Fraser skiplists:
+    at every relevant level the predecessor's key must be < k and its
+    authoritative successor's key must be >= k.  A Premature Descent during
+    the (stale-view) search manifests as a violation here, and the caller
+    must fall back to a strong search (base traversal on authoritative
+    arrays) — our ``repro.core.skiplist.search`` on the fresh state.
+    """
+    q = queries.astype(jnp.int32)[:, None]                # [B, 1]
+    L, cap, _ = fused.shape
+    lvls = jnp.arange(L, dtype=jnp.int32)[None, :]        # [1, L]
+    pk = jnp.take(auth_keys, preds.reshape(-1), axis=0).reshape(preds.shape)
+    flat = fused.reshape((-1, 2))
+    succ = jnp.take(flat, lvls * cap + preds, axis=0)[..., 0]
+    sk = jnp.take(auth_keys, succ.reshape(-1), axis=0).reshape(succ.shape)
+    relevant = lvls < heights[:, None]
+    level_ok = (~relevant) | ((pk < q) & (sk >= q))
+    ok = jnp.all(level_ok, axis=1)
+    bad = jnp.where(level_ok, L, lvls)
+    bad_level = jnp.min(bad, axis=1)
+    return PredValidation(ok, jnp.where(ok, -1, bad_level))

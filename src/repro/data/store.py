@@ -1,0 +1,100 @@
+"""Skiplist-indexed in-memory sample store — Foresight in the data plane.
+
+This is the framework-level deployment of the paper's technique (DESIGN.md
+§3): training samples live in a flat token array; an ordered index maps
+sample *keys* (stable 31-bit ids, e.g. shard/document hashes) to storage
+rows.  The data pipeline looks samples up by key — a batched foresight
+traversal — and can range-scan for shard assignment.  The index variant
+(base / foresight / foresight+kernel) is selectable so the macro benchmarks
+can compare them end-to-end, mirroring the paper's DBx1000 experiment where
+Fraser's skiplist indexes table rows.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import skiplist as sl
+from repro.kernels import ops as kops
+
+
+@dataclasses.dataclass
+class StoreConfig:
+    n_samples: int = 4096
+    seq_len: int = 128
+    vocab: int = 256
+    index_levels: int = 16
+    foresight: bool = True
+    use_kernel: bool = False
+    seed: int = 0
+
+
+class IndexedSampleStore:
+    """rows: [N, seq_len+1] tokens; index: key -> row (Foresight skiplist)."""
+
+    def __init__(self, cfg: StoreConfig, rows: Optional[np.ndarray] = None,
+                 keys: Optional[np.ndarray] = None):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        if rows is None:
+            rows = _markov_corpus(rng, cfg.n_samples, cfg.seq_len + 1,
+                                  cfg.vocab)
+        if keys is None:
+            keys = np.sort(rng.choice(2**30, cfg.n_samples, replace=False))
+        self.rows = jnp.asarray(rows, jnp.int32)
+        self.keys_np = keys.astype(np.int64)
+        cap = int(2 ** np.ceil(np.log2(cfg.n_samples * 2 + 4)))
+        self.index = sl.build(
+            jnp.asarray(keys, jnp.int32),
+            jnp.arange(cfg.n_samples, dtype=jnp.int32),   # value = row id
+            capacity=cap, levels=cfg.index_levels,
+            foresight=cfg.foresight, seed=cfg.seed)
+
+    # -- lookups ------------------------------------------------------------
+
+    def lookup(self, keys: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        """Batched key lookup -> (found [B], row_ids [B])."""
+        if self.cfg.use_kernel:
+            r = kops.search_kernel(self.index, keys)
+            return r.found, r.vals
+        return sl.search_fast(self.index, keys)   # preds-free read path
+
+    def get_batch(self, keys: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        """Fetch token rows for keys (missing keys fall back to row 0)."""
+        found, row_ids = self.lookup(keys)
+        safe = jnp.where(found, row_ids, 0)
+        return self.rows[safe], found
+
+    # -- updates (streaming ingestion) ---------------------------------------
+
+    def ingest(self, keys: jax.Array, row_ids: jax.Array) -> jax.Array:
+        """Insert new key->row mappings (linearized batch)."""
+        ops = jnp.full(keys.shape, sl.OP_INSERT, jnp.int32)
+        self.index, results = sl.apply_ops(self.index, ops, keys, row_ids)
+        return results
+
+    def evict(self, keys: jax.Array) -> jax.Array:
+        ops = jnp.full(keys.shape, sl.OP_DELETE, jnp.int32)
+        self.index, results = sl.apply_ops(self.index, ops, keys,
+                                           jnp.zeros_like(keys))
+        return results
+
+
+def _markov_corpus(rng: np.random.Generator, n: int, width: int,
+                   vocab: int) -> np.ndarray:
+    """Order-1 Markov token rows — learnable structure for train examples."""
+    trans = rng.dirichlet(np.full(vocab, 0.05), size=vocab)
+    cum = np.cumsum(trans, axis=1)
+    out = np.empty((n, width), np.int32)
+    state = rng.integers(0, vocab, size=n)
+    out[:, 0] = state
+    for t in range(1, width):
+        u = rng.random(n)
+        state = (cum[state] < u[:, None]).sum(axis=1)
+        state = np.minimum(state, vocab - 1)
+        out[:, t] = state
+    return out

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the Foresight skiplist (+ pure-jnp oracles)."""
+from repro.kernels.foresight_traverse import (QBLK, base_traverse,
+                                              foresight_traverse)
+from repro.kernels.ops import (KernelSearchResult, fits_vmem, search_kernel,
+                               search_kernel_float, vmem_footprint)
+from repro.kernels.ref import (base_search_ref, decode_float_keys,
+                               encode_float_keys, foresight_search_ref)
+from repro.kernels.validated_traverse import validated_traverse

@@ -1,0 +1,169 @@
+"""Pallas TPU kernels for batched skiplist traversal.
+
+TPU-native rethink of the paper's mechanism (DESIGN.md §7):
+
+* The fused index table is pinned in **VMEM** via an explicit BlockSpec (one
+  block covering the table — index tiles are sized to the VMEM budget; larger
+  indexes shard the key space across grid rows, see ``ops.py``).
+* Queries are processed in **lane-vector blocks** of ``QBLK`` (the VPU's
+  128-lane registers play the role of the paper's threads).
+* The traversal loop is **level-synchronous**: each iteration every live lane
+  either advances right or descends.  The foresight kernel issues ONE
+  dependent VMEM gather per iteration (the fused ``(ptr, key)`` record —
+  pair-atomic by layout, the MOVDQA analogue); the base kernel issues TWO
+  chained gathers (pointer, then pointee key).  Halving the dependent-gather
+  chain is exactly the paper's cache-miss saving, expressed in the
+  HBM→VMEM→VREG hierarchy.
+* ``max_steps`` is a static bound (lock-step traversals are wait-free: at
+  most ``levels + total-advances`` iterations; callers size it as
+  ``levels * slack``).  Lanes that finish idle — no divergence.
+
+Kernels are validated in ``interpret=True`` mode on CPU (bit-exact against
+``ref.py``); block shapes keep the minor dimension at 128 lanes and the
+fused pair in the minor-most axis so a real-TPU lowering fetches both halves
+in one transaction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+# ---------------------------------------------------------------------------
+# Foresight kernel: ONE dependent gather per lock-step iteration
+# ---------------------------------------------------------------------------
+
+def _foresight_kernel(q_ref, fused_ref, node_ref, key_ref, *,
+                      levels: int, cap: int, max_steps: int):
+    q = q_ref[...]                                   # [QBLK] int32
+    tbl = fused_ref[...]                             # [L, cap, 2] in VMEM
+    flat_ptr = tbl[..., 0].reshape(-1)
+    flat_key = tbl[..., 1].reshape(-1)
+
+    x = jnp.zeros_like(q)
+    lvl = jnp.full_like(q, levels - 1)
+
+    def body(_, carry):
+        x, lvl = carry
+        active = lvl >= 0
+        idx = jnp.maximum(lvl, 0) * cap + x
+        ptr = jnp.take(flat_ptr, idx, axis=0)        # ┐ one fused VMEM gather
+        fk = jnp.take(flat_key, idx, axis=0)         # ┘ (same record, 2 lanes)
+        go = active & (fk < q)
+        x = jnp.where(go, ptr, x)
+        lvl = jnp.where(go | ~active, lvl, lvl - 1)
+        return x, lvl
+
+    x, lvl = lax.fori_loop(0, max_steps, body, (x, lvl))
+    # Level-0 successor of the final predecessor = the candidate.
+    node_ref[...] = jnp.take(flat_ptr, x, axis=0)
+    key_ref[...] = jnp.take(flat_key, x, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Base kernel: TWO chained gathers per lock-step iteration
+# ---------------------------------------------------------------------------
+
+def _base_kernel(q_ref, nxt_ref, keys_ref, node_ref, key_ref, *,
+                 levels: int, cap: int, max_steps: int):
+    q = q_ref[...]
+    nxt = nxt_ref[...].reshape(-1)                   # [L*cap]
+    keys = keys_ref[...]                             # [cap]
+
+    x = jnp.zeros_like(q)
+    lvl = jnp.full_like(q, levels - 1)
+
+    def body(_, carry):
+        x, lvl = carry
+        active = lvl >= 0
+        idx = jnp.maximum(lvl, 0) * cap + x
+        ptr = jnp.take(nxt, idx, axis=0)             # gather 1
+        fk = jnp.take(keys, ptr, axis=0)             # gather 2 — DEPENDENT
+        go = active & (fk < q)
+        x = jnp.where(go, ptr, x)
+        lvl = jnp.where(go | ~active, lvl, lvl - 1)
+        return x, lvl
+
+    x, lvl = lax.fori_loop(0, max_steps, body, (x, lvl))
+    ptr = jnp.take(nxt, x, axis=0)
+    node_ref[...] = ptr
+    key_ref[...] = jnp.take(keys, ptr, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# pallas_call wrappers with explicit BlockSpec VMEM tiling
+# ---------------------------------------------------------------------------
+
+QBLK = 128     # query lanes per grid step == VPU lane width
+
+
+@functools.partial(jax.jit, static_argnames=("max_steps", "interpret"))
+def foresight_traverse(fused: jax.Array, queries: jax.Array, *,
+                       max_steps: int = 0, interpret: bool = True):
+    """Batched foresight search. Returns (node[B], cand_key[B]).
+
+    ``queries`` length must be a multiple of QBLK (ops.py pads).
+    """
+    L, cap, _ = fused.shape
+    B = queries.shape[0]
+    assert B % QBLK == 0, "pad queries to a multiple of QBLK"
+    if max_steps == 0:
+        max_steps = 4 * L + 16
+    grid = (B // QBLK,)
+    kernel = functools.partial(_foresight_kernel, levels=L, cap=cap,
+                               max_steps=max_steps)
+    node, key = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((QBLK,), lambda i: (i,)),          # queries → VMEM
+            pl.BlockSpec((L, cap, 2), lambda i: (0, 0, 0)),  # fused table → VMEM
+        ],
+        out_specs=[
+            pl.BlockSpec((QBLK,), lambda i: (i,)),
+            pl.BlockSpec((QBLK,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(queries.astype(jnp.int32), fused)
+    return node, key
+
+
+@functools.partial(jax.jit, static_argnames=("max_steps", "interpret"))
+def base_traverse(nxt: jax.Array, keys: jax.Array, queries: jax.Array, *,
+                  max_steps: int = 0, interpret: bool = True):
+    """Batched base (no-foresight) search. Returns (node[B], cand_key[B])."""
+    L, cap = nxt.shape
+    B = queries.shape[0]
+    assert B % QBLK == 0, "pad queries to a multiple of QBLK"
+    if max_steps == 0:
+        max_steps = 4 * L + 16
+    grid = (B // QBLK,)
+    kernel = functools.partial(_base_kernel, levels=L, cap=cap,
+                               max_steps=max_steps)
+    node, key = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((QBLK,), lambda i: (i,)),
+            pl.BlockSpec((L, cap), lambda i: (0, 0)),
+            pl.BlockSpec((cap,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((QBLK,), lambda i: (i,)),
+            pl.BlockSpec((QBLK,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(queries.astype(jnp.int32), nxt, keys)
+    return node, key

@@ -1,0 +1,70 @@
+"""jit'd public wrappers over the Pallas traversal kernels.
+
+Adds the ergonomics the raw kernels don't have: query padding to the lane
+block, found/value resolution, float-key encoding, and a VMEM-budget check
+that decides between the single-tile kernel and the sharded-key-space path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.skiplist import NULL_VAL, SkipListState
+from repro.kernels.foresight_traverse import (QBLK, base_traverse,
+                                              foresight_traverse)
+from repro.kernels.ref import encode_float_keys
+
+VMEM_BUDGET_BYTES = 12 * 1024 * 1024   # leave headroom of the 16 MiB/core
+
+
+class KernelSearchResult(NamedTuple):
+    found: jax.Array   # [B] bool
+    vals: jax.Array    # [B] int32
+    node: jax.Array    # [B] int32
+
+
+def _pad(q: jax.Array) -> Tuple[jax.Array, int]:
+    B = q.shape[0]
+    pad = (-B) % QBLK
+    if pad:
+        q = jnp.concatenate([q, jnp.zeros((pad,), q.dtype)])
+    return q, B
+
+
+def vmem_footprint(state: SkipListState) -> int:
+    """Bytes the index tile occupies in VMEM."""
+    if state.foresight:
+        return state.fused.size * 4
+    return state.nxt.size * 4 + state.keys.size * 4
+
+
+def fits_vmem(state: SkipListState) -> bool:
+    return vmem_footprint(state) <= VMEM_BUDGET_BYTES
+
+
+def search_kernel(state: SkipListState, queries: jax.Array, *,
+                  max_steps: int = 0, interpret: bool = True
+                  ) -> KernelSearchResult:
+    """Kernel-backed batched search on either variant; resolves found/vals."""
+    q, B = _pad(queries.astype(jnp.int32))
+    if state.foresight:
+        node, ckey = foresight_traverse(state.fused, q, max_steps=max_steps,
+                                        interpret=interpret)
+    else:
+        node, ckey = base_traverse(state.nxt, state.keys, q,
+                                   max_steps=max_steps, interpret=interpret)
+    node, ckey = node[:B], ckey[:B]
+    found = ckey == queries.astype(jnp.int32)
+    vals = jnp.where(found, jnp.take(state.vals, node), NULL_VAL)
+    return KernelSearchResult(found, vals, node)
+
+
+def search_kernel_float(state: SkipListState, float_queries: jax.Array, *,
+                        max_steps: int = 0, interpret: bool = True
+                        ) -> KernelSearchResult:
+    """Float-keyed search (keys must have been encoded at build time)."""
+    return search_kernel(state, encode_float_keys(float_queries),
+                         max_steps=max_steps, interpret=interpret)

@@ -1,0 +1,88 @@
+"""Pure-jnp oracles for the traversal kernels.
+
+These are standalone (raw arrays in, raw arrays out) so kernel tests do not
+depend on the full ``SkipListState`` plumbing.  Semantics are identical to
+``repro.core.skiplist.search`` — exact integer results, so tests assert
+bit-exact equality (``assert_allclose`` with atol=0 for float payloads).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def foresight_search_ref(fused: jax.Array, queries: jax.Array
+                         ) -> Tuple[jax.Array, jax.Array]:
+    """Oracle for the foresight kernel.
+
+    Args:
+      fused: [L, cap, 2] int32 — (next_ptr, next_key) records.
+      queries: [B] int32.
+    Returns:
+      (node, cand_key): [B] int32 each — the level-0 successor of the final
+      predecessor and its key (found iff cand_key == query).
+    """
+    L, cap, _ = fused.shape
+    flat = fused.reshape((-1, 2))
+    q = queries.astype(jnp.int32)
+    B = q.shape[0]
+    x = jnp.zeros((B,), jnp.int32)
+    lvl = jnp.full((B,), L - 1, jnp.int32)
+
+    def cond(c):
+        return jnp.any(c[1] >= 0)
+
+    def body(c):
+        x, lvl = c
+        active = lvl >= 0
+        rec = jnp.take(flat, jnp.maximum(lvl, 0) * cap + x, axis=0)
+        go = active & (rec[..., 1] < q)
+        return jnp.where(go, rec[..., 0], x), jnp.where(go | ~active, lvl, lvl - 1)
+
+    x, lvl = lax.while_loop(cond, body, (x, lvl))
+    rec = jnp.take(flat, x, axis=0)          # level 0: index = 0*cap + x
+    return rec[..., 0], rec[..., 1]
+
+
+def base_search_ref(nxt: jax.Array, keys: jax.Array, queries: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Oracle for the base (no-foresight) kernel: two dependent gathers."""
+    L, cap = nxt.shape
+    flat = nxt.reshape(-1)
+    q = queries.astype(jnp.int32)
+    B = q.shape[0]
+    x = jnp.zeros((B,), jnp.int32)
+    lvl = jnp.full((B,), L - 1, jnp.int32)
+
+    def cond(c):
+        return jnp.any(c[1] >= 0)
+
+    def body(c):
+        x, lvl = c
+        active = lvl >= 0
+        ptr = jnp.take(flat, jnp.maximum(lvl, 0) * cap + x, axis=0)
+        fk = jnp.take(keys, ptr, axis=0)
+        go = active & (fk < q)
+        return jnp.where(go, ptr, x), jnp.where(go | ~active, lvl, lvl - 1)
+
+    x, lvl = lax.while_loop(cond, body, (x, lvl))
+    ptr = jnp.take(flat, x, axis=0)
+    return ptr, jnp.take(keys, ptr, axis=0)
+
+
+def encode_float_keys(f: jax.Array) -> jax.Array:
+    """Order-preserving float32 -> int32 transform (Redis-style double keys).
+
+    For non-negative floats the IEEE bit pattern is already ordered; for
+    negative floats flipping all bits restores order.  NaNs are not allowed.
+    """
+    bits = f.astype(jnp.float32).view(jnp.int32)
+    return jnp.where(bits < 0, jnp.int32(-(2**31)) + (~bits), bits)
+
+
+def decode_float_keys(i: jax.Array) -> jax.Array:
+    bits = jnp.where(i < 0, ~(i - jnp.int32(-(2**31))), i)
+    return bits.view(jnp.float32)

@@ -1,0 +1,93 @@
+"""Pallas kernel for Optimistic-Validation search (paper Algorithm 3).
+
+The torn-read-safe traversal as a TPU kernel: the (possibly stale) fused
+table AND the authoritative key table are both VMEM-resident; upper levels
+advance on the foreseen key but validate against the authoritative key
+before committing; level 0 ignores foresight entirely.  Mirrors
+``repro.core.validated.search_validated`` bit-exactly (tested in
+tests/test_kernels_validated.py across shapes and corruption rates).
+
+This kernel is the serving-plane fast path for *mixed-view* reads
+(VersionedIndex.read_view(lag>0)): pipelined queries against a stale fused
+snapshot validated against fresh keys — the paper's concurrency story at
+version granularity.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.kernels.foresight_traverse import QBLK
+
+
+def _validated_kernel(q_ref, fused_ref, keys_ref, node_ref, key_ref, *,
+                      levels: int, cap: int, max_steps: int):
+    q = q_ref[...]                                  # [QBLK]
+    tbl = fused_ref[...]
+    flat_ptr = tbl[..., 0].reshape(-1)
+    flat_fk = tbl[..., 1].reshape(-1)
+    auth = keys_ref[...]                            # authoritative keys
+
+    x = jnp.zeros_like(q)
+    lvl = jnp.full_like(q, levels - 1)
+
+    def body(_, carry):
+        x, lvl = carry
+        active = lvl >= 0
+        at0 = lvl == 0
+        idx = jnp.maximum(lvl, 0) * cap + x
+        ptr = jnp.take(flat_ptr, idx, axis=0)       # fused gather (pair)
+        fk = jnp.take(flat_fk, idx, axis=0)
+        real = jnp.take(auth, ptr, axis=0)          # validation gather
+        # Alg. 3: upper levels advance iff foreseen AND validated;
+        # level 0 trusts only the authoritative key.
+        go = active & jnp.where(at0, real < q, (fk < q) & (real < q))
+        x = jnp.where(go, ptr, x)
+        lvl = jnp.where(go | ~active, lvl, lvl - 1)
+        return x, lvl
+
+    x, lvl = lax.fori_loop(0, max_steps, body, (x, lvl))
+    cand = jnp.take(flat_ptr, x, axis=0)            # level-0 successor
+    node_ref[...] = cand
+    key_ref[...] = jnp.take(auth, cand, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("max_steps", "interpret"))
+def validated_traverse(fused: jax.Array, auth_keys: jax.Array,
+                       queries: jax.Array, *, max_steps: int = 0,
+                       interpret: bool = True):
+    """Batched validated search. Returns (node[B], cand_key[B]).
+
+    ``fused`` may carry arbitrarily corrupt foreseen keys; results are
+    exact w.r.t. ``auth_keys`` + the pointer structure.
+    """
+    L, cap, _ = fused.shape
+    B = queries.shape[0]
+    assert B % QBLK == 0, "pad queries to a multiple of QBLK"
+    if max_steps == 0:
+        max_steps = 4 * L + 16
+    kernel = functools.partial(_validated_kernel, levels=L, cap=cap,
+                               max_steps=max_steps)
+    node, key = pl.pallas_call(
+        kernel,
+        grid=(B // QBLK,),
+        in_specs=[
+            pl.BlockSpec((QBLK,), lambda i: (i,)),
+            pl.BlockSpec((L, cap, 2), lambda i: (0, 0, 0)),
+            pl.BlockSpec((cap,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((QBLK,), lambda i: (i,)),
+            pl.BlockSpec((QBLK,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(queries.astype(jnp.int32), fused, auth_keys)
+    return node, key

@@ -1,0 +1,68 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Run the full dry-run matrix: every (arch x shape) cell on both meshes.
+
+Appends one JSON line per cell to --out (resumable: already-present cells
+are skipped), so the long matrix can run in the background and the roofline
+pass can stream results.
+"""
+import argparse
+import json
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/dryrun_cells.jsonl")
+    ap.add_argument("--only-arch", default="")
+    ap.add_argument("--single-pod-only", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import ARCH_IDS, cells
+    from repro.launch.dryrun import run_cell
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = set()
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    if r.get("ok"):
+                        done.add((r["arch"], r["shape"], r["multi_pod"]))
+                except json.JSONDecodeError:
+                    pass
+
+    jobs = []
+    for arch in ARCH_IDS:
+        if args.only_arch and arch != args.only_arch:
+            continue
+        for shape, _ in cells(arch):
+            jobs.append((arch, shape, False))
+            if not args.single_pod_only:
+                jobs.append((arch, shape, True))
+
+    t_start = time.time()
+    for i, (arch, shape, mp) in enumerate(jobs):
+        if (arch, shape, mp) in done:
+            print(f"[{i+1}/{len(jobs)}] skip {arch} {shape} mp={mp}",
+                  flush=True)
+            continue
+        t0 = time.time()
+        try:
+            res = run_cell(arch, shape, mp)
+        except Exception as e:  # noqa: BLE001 — record and continue
+            res = {"arch": arch, "shape": shape, "multi_pod": mp,
+                   "ok": False, "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-2000:]}
+        with open(args.out, "a") as f:
+            f.write(json.dumps(res) + "\n")
+        print(f"[{i+1}/{len(jobs)}] {arch} {shape} mp={mp} "
+              f"ok={res.get('ok')} {time.time()-t0:.1f}s "
+              f"(total {time.time()-t_start:.0f}s)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

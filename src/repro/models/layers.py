@@ -1,0 +1,314 @@
+"""Shared model layers: param builder, norms, rotary, attention, MLP.
+
+Conventions
+-----------
+* Params are nested dicts of arrays.  A single ``build_*`` function describes
+  each module once; the ``ParamBuilder`` materializes it as real arrays
+  (init), ShapeDtypeStructs (abstract, for dry-run) or logical-axis tuples
+  (for sharding policies) — one source of truth, three views.
+* Logical axes vocabulary (mapped to mesh axes by ``repro.parallel``):
+  "layers" (scan stack, never sharded), "embed" (d_model), "ffn", "heads",
+  "kv_heads", "head_dim", "vocab", "experts", "inner" (mamba), "state",
+  "conv", "frames".
+* Matmuls run in bf16 with fp32 accumulation (``preferred_element_type``);
+  norms and softmax statistics run in fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Param builder — one description, three materializations
+# ---------------------------------------------------------------------------
+
+class ParamBuilder:
+    """mode in {"init", "abstract", "axes"}."""
+
+    def __init__(self, mode: str, key: Optional[jax.Array] = None,
+                 dtype=jnp.bfloat16):
+        assert mode in ("init", "abstract", "axes")
+        self.mode = mode
+        self.key = key
+        self.dtype = dtype
+
+    def _next_key(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def param(self, shape: Tuple[int, ...], axes: Tuple[Optional[str], ...],
+              init: str = "normal", scale: float = 1.0,
+              dtype=None):
+        assert len(shape) == len(axes), (shape, axes)
+        dtype = dtype or self.dtype
+        if self.mode == "axes":
+            return axes
+        if self.mode == "abstract":
+            return jax.ShapeDtypeStruct(shape, dtype)
+        if init == "zeros":
+            return jnp.zeros(shape, dtype)
+        if init == "ones":
+            return jnp.ones(shape, dtype)
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        std = scale / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(self._next_key(), shape, jnp.float32)
+                * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms / rotary
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def rotary_embedding(positions: jax.Array, head_dim: int,
+                     theta: float = 10000.0) -> Tuple[jax.Array, jax.Array]:
+    """positions [*(B,) S] -> (cos, sin) each [..., S, head_dim/2] fp32."""
+    half = head_dim // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32)
+                    / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rotary(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x [..., S, H, D]; cos/sin [..., S, D/2] broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([xf1 * c - xf2 * s, xf2 * c + xf1 * s],
+                           axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (pure JAX, chunked online softmax) — O(S·chunk) memory
+# ---------------------------------------------------------------------------
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, q_chunk: int = 512,
+                    kv_chunk: int = 512, q_offset: int = 0) -> jax.Array:
+    """q [B,Sq,H,D], k/v [B,Skv,Hkv,D] (GQA broadcast). Returns [B,Sq,H,D].
+
+    Online-softmax over KV chunks inside a scan over Q chunks: activation
+    memory is O(q_chunk·kv_chunk) per head instead of O(Sq·Skv).  ``q_offset``
+    positions the query block for causal masking (prefill continuation).
+    """
+    B, Sq, H, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    rep = H // Hkv
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    nq = -(-Sq // q_chunk)
+    nkv = -(-Skv // kv_chunk)
+    pad_q = nq * q_chunk - Sq
+    pad_kv = nkv * kv_chunk - Skv
+    scale = 1.0 / math.sqrt(D)
+
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    # [nq, B, qc, H, D] / [nkv, B, kc, Hkv, D]
+    qs = qp.reshape(B, nq, q_chunk, H, D).transpose(1, 0, 2, 3, 4)
+    ks = kp.reshape(B, nkv, kv_chunk, Hkv, D).transpose(1, 0, 2, 3, 4)
+    vs = vp.reshape(B, nkv, kv_chunk, Hkv, D).transpose(1, 0, 2, 3, 4)
+
+    q_pos = q_offset + jnp.arange(nq * q_chunk).reshape(nq, q_chunk)
+    kv_pos = jnp.arange(nkv * kv_chunk).reshape(nkv, kv_chunk)
+    kv_valid = kv_pos < Skv
+
+    def q_block(carry, inp):
+        del carry
+        qb, qpos = inp                                  # [B,qc,H,D], [qc]
+
+        def kv_block(acc, kinp):
+            m, l, o = acc                               # running max/sum/out
+            kb, vb, kpos, kval = kinp
+            kg = jnp.repeat(kb, rep, axis=2)            # GQA broadcast
+            vg = jnp.repeat(vb, rep, axis=2)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qb, kg,
+                           preferred_element_type=jnp.float32) * scale
+            mask = kval[None, None, None, :]
+            if causal:
+                mask = mask & (qpos[None, None, :, None]
+                               >= kpos[None, None, None, :])
+            s = jnp.where(mask, s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhqk,bkhd->bqhd", p.astype(vg.dtype), vg,
+                            preferred_element_type=jnp.float32)
+            o_new = o * corr.transpose(0, 2, 1)[..., None] + pv
+            return (m_new, l_new, o_new), None
+
+        m0 = jnp.full((B, H, q_chunk), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, H, q_chunk), jnp.float32)
+        o0 = jnp.zeros((B, q_chunk, H, D), jnp.float32)
+        (m, l, o), _ = lax.scan(kv_block, (m0, l0, o0),
+                                (ks, vs, kv_pos, kv_valid))
+        norm = jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+        return None, (o / norm).astype(q.dtype)
+
+    _, outs = lax.scan(q_block, None, (qs, q_pos))      # [nq,B,qc,H,D]
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, nq * q_chunk, H, D)
+    return out[:, :Sq]
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     length: jax.Array) -> jax.Array:
+    """Single-position attention vs a cache.
+
+    q [B,1,H,D]; caches [B,Smax,Hkv,D]; ``length`` [] or [B] — number of
+    valid cache slots.  fp32 softmax; GQA broadcast.  (The seq-sharded
+    distributed version lives in ``repro.parallel.decode_attn``.)
+    """
+    B, Smax, Hkv, D = k_cache.shape
+    H = q.shape[2]
+    rep = H // Hkv
+    kg = jnp.repeat(k_cache, rep, axis=2)
+    vg = jnp.repeat(v_cache, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kg,
+                   preferred_element_type=jnp.float32) / math.sqrt(D)
+    pos = jnp.arange(Smax)
+    valid = pos[None, :] < jnp.reshape(length, (-1, 1))
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p.astype(vg.dtype), vg,
+                      preferred_element_type=jnp.float32).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (GQA + rotary), train/prefill + decode-with-cache
+# ---------------------------------------------------------------------------
+
+def build_attention(pb: ParamBuilder, d_model: int, n_heads: int,
+                    n_kv_heads: int, head_dim: int) -> PyTree:
+    return {
+        "wq": pb.param((d_model, n_heads, head_dim),
+                       ("embed", "heads", "head_dim")),
+        "wk": pb.param((d_model, n_kv_heads, head_dim),
+                       ("embed", "kv_heads", "head_dim")),
+        "wv": pb.param((d_model, n_kv_heads, head_dim),
+                       ("embed", "kv_heads", "head_dim")),
+        "wo": pb.param((n_heads, head_dim, d_model),
+                       ("heads", "head_dim", "embed")),
+    }
+
+
+def attention_fwd(p: PyTree, x: jax.Array, positions: jax.Array, *,
+                  causal: bool = True, kv_override: Optional[jax.Array] = None
+                  ) -> jax.Array:
+    """Full-sequence attention (training / prefill).
+
+    ``kv_override`` (encoder output) switches this into cross-attention.
+    """
+    src = x if kv_override is None else kv_override
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    if kv_override is None:                    # rotary only for self-attn
+        cos, sin = rotary_embedding(positions, q.shape[-1])
+        q = apply_rotary(q, cos, sin)
+        k = apply_rotary(k, cos, sin)
+    o = flash_attention(q, k, v, causal=causal and kv_override is None)
+    # fp32 accumulation on the output projection.  (§Perf iteration 5 tried
+    # bf16 here to halve the TP all-reduce: measured zero collective benefit
+    # — the dominant colls are remat-resharding — and a visible optimization
+    # slowdown at smoke scale, so it was REVERTED.  Honest engineering: a
+    # numerics-risky change with no measured win does not ship.)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"],
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def attention_decode(p: PyTree, x: jax.Array, cache: Dict[str, jax.Array],
+                     position: jax.Array) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode. cache = {"k": [B,Smax,Hkv,D], "v": ..., "len": [B]}."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    pos = jnp.reshape(position, (-1,))
+    cos, sin = rotary_embedding(pos[:, None], q.shape[-1])
+    q = apply_rotary(q, cos, sin)
+    k = apply_rotary(k, cos, sin)
+    # Scatter the new K/V at each sequence's own length (vectorized via iota).
+    B, Smax = cache["k"].shape[:2]
+    slot = jnp.reshape(cache["len"], (-1,))
+    onehot = (jnp.arange(Smax)[None, :] == slot[:, None])
+    k_cache = jnp.where(onehot[:, :, None, None],
+                        k.astype(cache["k"].dtype), cache["k"])
+    v_cache = jnp.where(onehot[:, :, None, None],
+                        v.astype(cache["v"].dtype), cache["v"])
+    new_len = cache["len"] + 1
+    o = decode_attention(q, k_cache, v_cache, new_len)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, {"k": k_cache, "v": v_cache, "len": new_len}
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU) and embedding
+# ---------------------------------------------------------------------------
+
+def build_mlp(pb: ParamBuilder, d_model: int, d_ff: int) -> PyTree:
+    return {
+        "w_gate": pb.param((d_model, d_ff), ("embed", "ffn")),
+        "w_up": pb.param((d_model, d_ff), ("embed", "ffn")),
+        "w_down": pb.param((d_ff, d_model), ("ffn", "embed")),
+    }
+
+
+def mlp_fwd(p: PyTree, x: jax.Array) -> jax.Array:
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"],
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"],
+                   preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    # fp32 accumulation (bf16-reduce variant reverted — §Perf iteration 5).
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"],
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def build_embedding(pb: ParamBuilder, vocab: int, d_model: int) -> PyTree:
+    return {"table": pb.param((vocab, d_model), ("vocab", "embed"),
+                              scale=1.0)}
+
+
+def embed_fwd(p: PyTree, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed_fwd(p: PyTree, x: jax.Array) -> jax.Array:
+    """Tied unembedding: logits in fp32 (loss stability)."""
+    return jnp.einsum("bsd,vd->bsv", x, p["table"],
+                      preferred_element_type=jnp.float32)

@@ -1,0 +1,152 @@
+"""Mamba (selective SSM) mixer — for the Jamba hybrid architecture.
+
+Training/prefill uses a *chunked* scan: a sequential ``lax.scan`` over
+chunks of the time axis carrying the SSM state, with an associative scan
+inside each chunk — O(chunk · d_inner · d_state) activation memory instead
+of O(S · d_inner · d_state).  Decode is the single-step recurrence with the
+state carried in the cache (O(1) in context length — this is why Jamba runs
+the long_500k cell).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import ParamBuilder
+
+PyTree = Any
+
+D_STATE = 16
+D_CONV = 4
+CHUNK = 256
+
+
+def build_mamba(pb: ParamBuilder, d_model: int, expand: int = 2,
+                dt_rank: int = 0) -> PyTree:
+    d_inner = expand * d_model
+    dt_rank = dt_rank or max(d_model // 16, 1)
+    return {
+        "in_proj": pb.param((d_model, 2 * d_inner), ("embed", "inner")),
+        "conv_w": pb.param((D_CONV, d_inner), ("conv", "inner")),
+        "conv_b": pb.param((d_inner,), ("inner",), init="zeros"),
+        "x_proj": pb.param((d_inner, dt_rank + 2 * D_STATE),
+                           ("inner", "state")),
+        "dt_proj_w": pb.param((dt_rank, d_inner), ("state", "inner")),
+        "dt_proj_b": pb.param((d_inner,), ("inner",), init="zeros"),
+        "a_log": pb.param((d_inner, D_STATE), ("inner", "state"),
+                          init="ones", dtype=jnp.float32),
+        "d_skip": pb.param((d_inner,), ("inner",), init="ones",
+                           dtype=jnp.float32),
+        "out_proj": pb.param((d_inner, d_model), ("inner", "embed")),
+    }
+
+
+def _ssm_inputs(p: PyTree, u: jax.Array):
+    """u [B,S,d_inner] -> discretized (a [B,S,di,N], bu [B,S,di,N], Cmat)."""
+    dt_rank = p["dt_proj_w"].shape[0]
+    proj = jnp.einsum("bsi,ir->bsr", u, p["x_proj"],
+                      preferred_element_type=jnp.float32)
+    dt_in = proj[..., :dt_rank]
+    Bmat = proj[..., dt_rank:dt_rank + D_STATE]                 # [B,S,N]
+    Cmat = proj[..., dt_rank + D_STATE:]                        # [B,S,N]
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt_in, p["dt_proj_w"],
+                   preferred_element_type=jnp.float32)
+        + p["dt_proj_b"].astype(jnp.float32))                   # [B,S,di]
+    A = -jnp.exp(p["a_log"])                                    # [di,N]
+    a = jnp.exp(dt[..., None] * A[None, None])                  # [B,S,di,N]
+    bu = (dt * u.astype(jnp.float32))[..., None] * Bmat[:, :, None, :]
+    return a, bu, Cmat
+
+
+def _chunk_scan(a: jax.Array, bu: jax.Array, h0: jax.Array):
+    """Associative scan within a chunk. a/bu [B,c,di,N]; h0 [B,di,N]."""
+    def combine(x, y):
+        ax, bx = x
+        ay, by = y
+        return ax * ay, ay * bx + by
+
+    a_all, b_all = lax.associative_scan(combine, (a, bu), axis=1)
+    h = a_all * h0[:, None] + b_all                             # [B,c,di,N]
+    return h, h[:, -1]
+
+
+def mamba_fwd(p: PyTree, x: jax.Array) -> jax.Array:
+    """Full-sequence forward. x [B,S,d] -> [B,S,d]."""
+    B, S, d = x.shape
+    d_inner = p["conv_w"].shape[1]
+    ug = jnp.einsum("bsd,di->bsi", x, p["in_proj"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    u, z = ug[..., :d_inner], ug[..., d_inner:]
+
+    # Depthwise causal conv, kernel D_CONV.
+    upad = jnp.pad(u, ((0, 0), (D_CONV - 1, 0), (0, 0)))
+    conv = sum(upad[:, i:i + S] * p["conv_w"][i][None, None]
+               for i in range(D_CONV)) + p["conv_b"][None, None]
+    u = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)
+
+    a, bu, Cmat = _ssm_inputs(p, u)
+
+    # Chunked scan over time.
+    pad = (-S) % CHUNK
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+        bu = jnp.pad(bu, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nch = (S + pad) // CHUNK
+    a_c = a.reshape(B, nch, CHUNK, d_inner, D_STATE).transpose(1, 0, 2, 3, 4)
+    bu_c = bu.reshape(B, nch, CHUNK, d_inner, D_STATE).transpose(1, 0, 2, 3, 4)
+
+    def step(h, inp):
+        ac, buc = inp
+        hs, h_last = _chunk_scan(ac, buc, h)
+        return h_last, hs
+
+    h0 = jnp.zeros((B, d_inner, D_STATE), jnp.float32)
+    _, hs = lax.scan(step, h0, (a_c, bu_c))                     # [nch,B,c,di,N]
+    hs = hs.transpose(1, 0, 2, 3, 4).reshape(B, S + pad, d_inner, D_STATE)
+    hs = hs[:, :S]
+
+    y = jnp.einsum("bsin,bsn->bsi", hs, Cmat,
+                   preferred_element_type=jnp.float32)
+    y = y + p["d_skip"][None, None] * u.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return jnp.einsum("bsi,id->bsd", y.astype(x.dtype), p["out_proj"],
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def mamba_init_cache(p: PyTree, batch: int, dtype=jnp.float32
+                     ) -> Dict[str, jax.Array]:
+    d_inner = p["conv_w"].shape[1]
+    return {
+        "h": jnp.zeros((batch, d_inner, D_STATE), jnp.float32),
+        "conv": jnp.zeros((batch, D_CONV - 1, d_inner), dtype),
+    }
+
+
+def mamba_decode(p: PyTree, x: jax.Array, cache: Dict[str, jax.Array]
+                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token recurrence. x [B,1,d]."""
+    B = x.shape[0]
+    d_inner = p["conv_w"].shape[1]
+    ug = jnp.einsum("bsd,di->bsi", x, p["in_proj"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    u, z = ug[..., :d_inner], ug[..., d_inner:]
+
+    window = jnp.concatenate([cache["conv"], u.astype(cache["conv"].dtype)],
+                             axis=1)                            # [B,D_CONV,di]
+    conv = jnp.einsum("bki,ki->bi", window.astype(jnp.float32),
+                      p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    uc = jax.nn.silu(conv)[:, None].astype(x.dtype)             # [B,1,di]
+
+    a, bu, Cmat = _ssm_inputs(p, uc)
+    h = cache["h"] * a[:, 0] + bu[:, 0]                         # [B,di,N]
+    y = jnp.einsum("bin,bn->bi", h, Cmat[:, 0],
+                   preferred_element_type=jnp.float32)
+    y = y + p["d_skip"][None] * uc[:, 0].astype(jnp.float32)
+    y = y * jax.nn.silu(z[:, 0].astype(jnp.float32))
+    out = jnp.einsum("bi,id->bd", y.astype(x.dtype), p["out_proj"],
+                     preferred_element_type=jnp.float32)[:, None].astype(x.dtype)
+    return out, {"h": h, "conv": window[:, 1:]}

@@ -1,0 +1,155 @@
+"""Mixture-of-Experts FFN — sort-based token dispatch (GShard/Switch style).
+
+Compile-friendly and shardable: tokens are argsorted by expert id, placed
+into a fixed-capacity [E, C, d] buffer (overflow dropped — standard capacity
+factor semantics), batch-matmul'd against stacked expert weights, and
+scattered back weighted by the router gates.
+
+Sharding: the "experts" logical axis maps to the mesh "data" axis (expert
+parallelism); inside each expert the ffn dim maps to "model" (TP).  Under
+GSPMD the gather/scatter between token-sharded and expert-sharded layouts
+lowers to all-to-all-style collectives; the roofline pass measures them.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import ParamBuilder
+
+PyTree = Any
+
+
+def build_moe(pb: ParamBuilder, d_model: int, d_ff: int, n_experts: int
+              ) -> PyTree:
+    return {
+        "router": pb.param((d_model, n_experts), ("embed", "experts"),
+                           dtype=jnp.float32),
+        "w_gate": pb.param((n_experts, d_model, d_ff),
+                           ("experts", "embed", "ffn")),
+        "w_up": pb.param((n_experts, d_model, d_ff),
+                         ("experts", "embed", "ffn")),
+        "w_down": pb.param((n_experts, d_ff, d_model),
+                           ("experts", "ffn", "embed")),
+    }
+
+
+def _dispatch_group(xt, router, top_k: int, C: int, E: int):
+    """Dispatch one token group. xt [Tg, d] -> (buf [E,C,d], combine info).
+
+    All indices here are GROUP-LOCAL — under vmap the scatter gains a
+    leading batch dim and GSPMD partitions it along the group axis with no
+    communication (the fix for the replicated-dispatch pathology, see
+    EXPERIMENTS.md §Perf iteration 1).
+    """
+    Tg, d = xt.shape
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), router)
+    probs = jax.nn.softmax(logits, axis=-1)                      # [Tg,E]
+    gate_vals, eidx = lax.top_k(probs, top_k)                    # [Tg,K]
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(eidx, E, dtype=jnp.float32), axis=1), axis=0)
+    aux = jnp.sum(me * ce) * E
+
+    te = eidx.reshape(-1)                                        # [Tg*K]
+    tok = jnp.repeat(jnp.arange(Tg, dtype=jnp.int32), top_k)
+    gates = gate_vals.reshape(-1)
+    order = jnp.argsort(te, stable=True)
+    te_s, tok_s, gate_s = te[order], tok[order], gates[order]
+    counts = jnp.bincount(te, length=E)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(Tg * top_k, dtype=jnp.int32) - starts[te_s]
+    keep = pos < C
+    slot = jnp.where(keep, te_s * C + pos, E * C)                # OOB -> drop
+
+    buf = jnp.zeros((E * C, d), xt.dtype).at[slot].set(
+        xt[tok_s], mode="drop")
+    return buf.reshape(E, C, d), (tok_s, gate_s, slot, keep), aux
+
+
+def _combine_group(y_e, info, Tg: int, dtype):
+    """Weighted scatter back for one group. y_e [E,C,d] -> [Tg,d]."""
+    tok_s, gate_s, slot, keep = info
+    EC, d = y_e.shape[0] * y_e.shape[1], y_e.shape[2]
+    y_slots = y_e.reshape(EC, d)
+    gathered = jnp.where(keep[:, None],
+                         y_slots[jnp.minimum(slot, EC - 1)], 0.0)
+    return jnp.zeros((Tg, d), dtype).at[tok_s].add(
+        gathered * gate_s[:, None].astype(dtype), mode="drop")
+
+
+def moe_fwd(p: PyTree, x: jax.Array, *, top_k: int,
+            capacity_factor: float = 1.25, cs=None
+            ) -> Tuple[jax.Array, jax.Array]:
+    """x [B,S,d] -> (y [B,S,d], aux_loss []).
+
+    GShard-style grouped dispatch: tokens are split into G groups (G = the
+    DP degree, carried on ``cs.moe_groups``); routing/scatter run vmapped
+    per group with group-local indices, so the dispatch buffers
+    [G, E, C, d] shard over DP with zero communication.  The only
+    collectives are the two buffer reshards around the expert einsum
+    (G-sharded <-> E-sharded) — true all-to-alls of token volume, not the
+    replicated-buffer all-reduces the naive global scatter costs
+    (measured 34 GB fp32/layer on granite train_4k; see §Perf).
+
+    aux_loss is the standard load-balancing loss (mean_prob·mean_assign·E).
+    """
+    B, S, d = x.shape
+    E = p["router"].shape[1]
+    T = B * S
+    G = getattr(cs, "moe_groups", 1) if cs is not None else 1
+    if T % G or G <= 0:
+        G = 1
+    Tg = T // G
+    C = int(capacity_factor * Tg * top_k / E) + 1      # per-expert-per-group
+    C = ((C + 127) // 128) * 128   # lane-align; divisible by TP for "ep_ctp"
+
+    xg = x.reshape(G, Tg, d)
+    if cs is not None:
+        xg = cs(xg, "gtd")
+
+    buf, info, aux = jax.vmap(
+        lambda xt: _dispatch_group(xt, p["router"], top_k, C, E))(xg)
+    aux = jnp.mean(aux)
+    # "dp" mode: leave the buffers UNCONSTRAINED — forcing P(b,·,·,·) would
+    # mean "replicated over TP" and GSPMD inserts 2.7 GB/layer all-gathers
+    # (measured, §Perf iter. 4); unconstrained, GSPMD shards C over TP and
+    # keeps everything local.
+    constrain_buf = cs is not None
+    if constrain_buf:
+        if getattr(cs, "moe_mode", "") != "dp":
+            buf = cs(buf, "gecd_dp")    # [G,E,C,d] G-sharded (local so far)
+        buf = cs(buf, "gecd_ep")        # reshard (a2a for EP; C->TP for dp)
+
+    # CPU eager backend (DotThunk) lacks batched BF16xBF16->F32; upcast
+    # there only.  XLA hoists the cast above the dispatch all-to-all, so
+    # the compile-only dry-run must NOT upcast (REPRO_MOE_BF16=1, set by
+    # launch/dryrun.py) or the measured collectives would be 2x the real
+    # TPU bf16 volume.  TPU path stays bf16 in / f32 accumulate.
+    import os as _os
+    up = (lambda a: a.astype(jnp.float32)) \
+        if (jax.default_backend() == "cpu"
+            and not _os.environ.get("REPRO_MOE_BF16")) else (lambda a: a)
+    g = jnp.einsum("gecd,edf->gecf", up(buf), up(p["w_gate"]),
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("gecd,edf->gecf", up(buf), up(p["w_up"]),
+                   preferred_element_type=jnp.float32)
+    act = (jax.nn.silu(g) * u).astype(x.dtype)
+    if constrain_buf:
+        act = cs(act, "gecf")
+    y_e = jnp.einsum("gecf,efd->gecd", up(act), up(p["w_down"]),
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    if constrain_buf:
+        y_e = cs(y_e, "gecd_ep")
+        y_e = cs(y_e, "gecd_dp")        # all-to-all back: E -> G
+
+    y = jax.vmap(lambda ye, inf: _combine_group(ye, inf, Tg, x.dtype))(
+        y_e, info)
+    if cs is not None:
+        y = cs(y, "gtd")
+    return y.reshape(B, S, d), aux

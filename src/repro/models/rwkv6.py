@@ -1,0 +1,181 @@
+"""RWKV-6 "Finch" mixer — attention-free, data-dependent decay.
+
+Time-mixing follows arXiv:2404.05892: token-shift interpolation with
+data-dependent mix (low-rank), per-channel data-dependent decay ``w`` via a
+LoRA on the shifted input, and the WKV linear-attention recurrence per head:
+
+    S_t = diag(exp(-exp(w_t))) · S_{t-1} + k_tᵀ v_t
+    o_t = r_t · (S_{t-1} + diag(u) k_tᵀ v_t)
+
+Training/prefill runs a chunked sequential scan over time (state
+[B,H,D,D]); decode is the O(1) single-step recurrence — rwkv6 therefore
+runs the long_500k cell with constant state.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import ParamBuilder
+
+PyTree = Any
+
+HEAD_DIM = 64
+LORA_R = 32
+T_CHUNK = 128
+
+
+def build_rwkv6(pb: ParamBuilder, d_model: int) -> PyTree:
+    H = d_model // HEAD_DIM
+    return {
+        # token-shift mix coefficients (static part) for r,k,v,w,g
+        "mix": pb.param((5, d_model), (None, "embed"), init="zeros",
+                        dtype=jnp.float32),
+        # data-dependent mix LoRA
+        "mix_lora_a": pb.param((d_model, 5 * LORA_R), ("embed", None)),
+        "mix_lora_b": pb.param((5, LORA_R, d_model), (None, None, "embed")),
+        "wr": pb.param((d_model, d_model), ("embed", "inner")),
+        "wk": pb.param((d_model, d_model), ("embed", "inner")),
+        "wv": pb.param((d_model, d_model), ("embed", "inner")),
+        "wg": pb.param((d_model, d_model), ("embed", "inner")),
+        # decay: static base + LoRA(data)
+        "w_base": pb.param((d_model,), ("embed",), init="zeros",
+                           dtype=jnp.float32),
+        "w_lora_a": pb.param((d_model, LORA_R), ("embed", None)),
+        "w_lora_b": pb.param((LORA_R, d_model), (None, "embed")),
+        "u_bonus": pb.param((d_model,), ("embed",), init="zeros",
+                            dtype=jnp.float32),
+        "wo": pb.param((d_model, d_model), ("inner", "embed")),
+        "ln_w": pb.param((d_model,), ("embed",), init="ones",
+                         dtype=jnp.float32),
+        "ln_b": pb.param((d_model,), ("embed",), init="zeros",
+                         dtype=jnp.float32),
+    }
+
+
+def _projections(p: PyTree, x: jax.Array, x_prev: jax.Array):
+    """Token-shift mixing + projections. x, x_prev [B,S,d]."""
+    B, S, d = x.shape
+    delta = (x_prev - x).astype(jnp.float32)
+    lora = jnp.einsum("bsd,dr->bsr", x.astype(jnp.float32),
+                      p["mix_lora_a"].astype(jnp.float32))
+    lora = jnp.tanh(lora).reshape(B, S, 5, LORA_R)
+    dyn = jnp.einsum("bsfr,frd->bsfd", lora,
+                     p["mix_lora_b"].astype(jnp.float32))      # [B,S,5,d]
+    mix = p["mix"][None, None] + dyn                           # [B,S,5,d]
+    xi = x.astype(jnp.float32)[:, :, None] + delta[:, :, None] * mix
+    xr, xk, xv, xw, xg = [xi[:, :, i].astype(x.dtype) for i in range(5)]
+
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"],
+                   preferred_element_type=jnp.float32)
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"],
+                   preferred_element_type=jnp.float32)
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"],
+                   preferred_element_type=jnp.float32)
+    g = jnp.einsum("bsd,de->bse", xg, p["wg"],
+                   preferred_element_type=jnp.float32)
+    wl = jnp.tanh(jnp.einsum("bsd,dr->bsr", xw.astype(jnp.float32),
+                             p["w_lora_a"].astype(jnp.float32)))
+    w = p["w_base"][None, None] + jnp.einsum(
+        "bsr,rd->bsd", wl, p["w_lora_b"].astype(jnp.float32))
+    decay = jnp.exp(-jnp.exp(w))                               # (0,1) per chan
+    return r, k, v, g, decay
+
+
+def _wkv_chunk(carry, inp, H):
+    """Sequential WKV over one chunk. carry S:[B,H,D,D]."""
+    S0 = carry
+    r, k, v, decay, u = inp          # each [B,c,H,D] (u [H,D])
+
+    def step(Sst, t_inp):
+        rt, kt, vt, dt = t_inp       # [B,H,D]
+        kv = kt[..., :, None] * vt[..., None, :]               # [B,H,D,D]
+        out = jnp.einsum("bhd,bhde->bhe", rt, Sst + u[None, :, :, None] * kv)
+        Snew = dt[..., None] * Sst + kv
+        return Snew, out
+
+    Sn, outs = lax.scan(step, S0,
+                        (r.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+                         v.transpose(1, 0, 2, 3), decay.transpose(1, 0, 2, 3)))
+    return Sn, outs.transpose(1, 0, 2, 3)                      # [B,c,H,D]
+
+
+def rwkv6_fwd(p: PyTree, x: jax.Array) -> jax.Array:
+    """Full-sequence forward. x [B,S,d]."""
+    B, S, d = x.shape
+    H = d // HEAD_DIM
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r, k, v, g, decay = _projections(p, x, x_prev)
+
+    rh = r.reshape(B, S, H, HEAD_DIM)
+    kh = k.reshape(B, S, H, HEAD_DIM)
+    vh = v.reshape(B, S, H, HEAD_DIM)
+    dh = decay.reshape(B, S, H, HEAD_DIM)
+    u = p["u_bonus"].reshape(H, HEAD_DIM)
+
+    pad = (-S) % T_CHUNK
+    if pad:
+        rh, kh, vh = (jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                      for a in (rh, kh, vh))
+        dh = jnp.pad(dh, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                     constant_values=1.0)
+    nch = (S + pad) // T_CHUNK
+
+    def chunk(Sst, idx):
+        sl = lambda a: lax.dynamic_slice_in_dim(a, idx * T_CHUNK, T_CHUNK, 1)
+        return _wkv_chunk(Sst, (sl(rh), sl(kh), sl(vh), sl(dh), u), H)
+
+    S0 = jnp.zeros((B, H, HEAD_DIM, HEAD_DIM), jnp.float32)
+    _, outs = lax.scan(chunk, S0, jnp.arange(nch))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, S + pad, H * HEAD_DIM)[:, :S]
+
+    out = out * jax.nn.silu(g)                                  # gated
+    out = _group_norm(out, p["ln_w"], p["ln_b"], H)
+    return jnp.einsum("bsd,de->bse", out.astype(x.dtype), p["wo"],
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def _group_norm(x: jax.Array, w: jax.Array, b: jax.Array, groups: int):
+    B, S, d = x.shape
+    xg = x.reshape(B, S, groups, d // groups).astype(jnp.float32)
+    mu = jnp.mean(xg, axis=-1, keepdims=True)
+    var = jnp.var(xg, axis=-1, keepdims=True)
+    y = ((xg - mu) * lax.rsqrt(var + 1e-5)).reshape(B, S, d)
+    return y * w.astype(jnp.float32) + b.astype(jnp.float32)
+
+
+def rwkv6_init_cache(p: PyTree, batch: int, dtype=jnp.bfloat16
+                     ) -> Dict[str, jax.Array]:
+    d = p["wr"].shape[0]
+    H = d // HEAD_DIM
+    return {
+        "shift": jnp.zeros((batch, 1, d), dtype),
+        "wkv": jnp.zeros((batch, H, HEAD_DIM, HEAD_DIM), jnp.float32),
+    }
+
+
+def rwkv6_decode(p: PyTree, x: jax.Array, cache: Dict[str, jax.Array]
+                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token recurrence. x [B,1,d]; state is O(1) in context length."""
+    B, _, d = x.shape
+    H = d // HEAD_DIM
+    r, k, v, g, decay = _projections(p, x, cache["shift"].astype(x.dtype))
+    rt = r.reshape(B, H, HEAD_DIM)
+    kt = k.reshape(B, H, HEAD_DIM)
+    vt = v.reshape(B, H, HEAD_DIM)
+    dt = decay.reshape(B, H, HEAD_DIM)
+    u = p["u_bonus"].reshape(H, HEAD_DIM)
+
+    kv = kt[..., :, None] * vt[..., None, :]
+    out = jnp.einsum("bhd,bhde->bhe", rt, cache["wkv"]
+                     + u[None, :, :, None] * kv)
+    S_new = dt[..., None] * cache["wkv"] + kv
+
+    out = out.reshape(B, 1, d) * jax.nn.silu(g)
+    out = _group_norm(out, p["ln_w"], p["ln_b"], H)
+    y = jnp.einsum("bsd,de->bse", out.astype(x.dtype), p["wo"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    return y, {"shift": x.astype(cache["shift"].dtype), "wkv": S_new}

@@ -1,0 +1,111 @@
+"""AdamW — functional, shardable, with memory-tiering for huge models.
+
+* Moments are stored in configurable dtypes: fp32 default; bf16 first moment
+  for the 398B-class archs (halves optimizer HBM; documented trade-off).
+* Gradient "compression": grads flow in bf16 (param dtype), so the implicit
+  cross-DP all-reduce moves half the bytes of an fp32 reduction; the update
+  math upcasts to fp32.  Global-norm clipping runs in fp32.
+* ZeRO-1: the *sharding* of moments is decided by the Policy
+  (opt_sharding_tree) — this module is sharding-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamWState(NamedTuple):
+    mu: PyTree
+    nu: PyTree
+    count: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr_peak: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    mu_dtype: Any = jnp.float32
+    nu_dtype: Any = jnp.float32
+
+
+def lr_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup -> cosine decay to 10%."""
+    step = step.astype(jnp.float32)
+    warm = step / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.1 + 0.45 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr_peak * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init(cfg: AdamWConfig, params: PyTree) -> AdamWState:
+    mu = jax.tree.map(lambda p: jnp.zeros(p.shape, cfg.mu_dtype), params)
+    nu = jax.tree.map(lambda p: jnp.zeros(p.shape, cfg.nu_dtype), params)
+    return AdamWState(mu=mu, nu=nu, count=jnp.int32(0))
+
+
+def abstract_state(cfg: AdamWConfig, abstract_params: PyTree) -> AdamWState:
+    mu = jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, cfg.mu_dtype),
+                      abstract_params)
+    nu = jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, cfg.nu_dtype),
+                      abstract_params)
+    return AdamWState(mu=mu, nu=nu,
+                      count=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+             for l in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def update(cfg: AdamWConfig, grads: PyTree, state: AdamWState,
+           params: PyTree) -> Tuple[PyTree, AdamWState, dict]:
+    count = state.count + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = lr_schedule(cfg, count)
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32) * scale
+        mf = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * gf
+        vf = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * gf * gf
+        mhat = mf / b1c
+        vhat = vf / b2c
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        decay = cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * (step + decay)
+        return (new_p.astype(p.dtype), mf.astype(cfg.mu_dtype),
+                vf.astype(cfg.nu_dtype))
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.mu)
+    flat_v = jax.tree.leaves(state.nu)
+    new = [upd(g, m, v, p) for g, m, v, p
+           in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = jax.tree.unflatten(treedef, [t[0] for t in new])
+    new_m = jax.tree.unflatten(treedef, [t[1] for t in new])
+    new_v = jax.tree.unflatten(treedef, [t[2] for t in new])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, AdamWState(new_m, new_v, count), metrics
+
+
+def config_for(arch_name: str, total_steps: int = 10000) -> AdamWConfig:
+    """Memory-tiered per arch: 398B-class models store mu in bf16."""
+    if "jamba" in arch_name:
+        return AdamWConfig(total_steps=total_steps, mu_dtype=jnp.bfloat16)
+    return AdamWConfig(total_steps=total_steps)

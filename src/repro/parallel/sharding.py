@@ -1,0 +1,279 @@
+"""Sharding policies: logical param/activation axes -> mesh axes.
+
+The model layer annotates every parameter with *logical* axis names
+("embed", "ffn", "heads", "vocab", "experts", ...).  A ``Policy`` maps those
+to mesh axes under the constraint that a mesh axis is used at most once per
+tensor, with priority:
+
+  1. "experts" -> the EP axis ("data") — expert parallelism,
+  2. TP dims ("vocab"/"ffn"/"heads"/"inner") -> "model",
+  3. "embed" -> the FSDP axes (param+optimizer-state sharding over "data"
+     (+"pod")) when the policy enables it and the axis is still free.
+
+Per-arch policies: small/medium archs replicate over DP (pure DP+TP+EP);
+jamba-398B / phi3.5-42b enable FSDP.  Optimizer state can additionally be
+sharded over DP (ZeRO-1) independently of the param policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import dp_axes, dp_size
+
+TP_LOGICAL = ("vocab", "ffn", "heads", "inner")
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    tp_axis: str = "model"
+    ep_axis: str = "data"
+    fsdp: bool = False              # shard "embed" dims over DP axes
+    zero1: bool = True              # optimizer state sharded over DP axes
+    # MoE distribution mode (§Perf iterations 2-3):
+    #   "ep_a2a"  — experts over EP axis, grouped all-to-all dispatch,
+    #               expert ffn dim over TP (row-parallel all-reduce cost);
+    #   "ep_ctp"  — experts over EP, *capacity* over TP (no TP all-reduce;
+    #               expert weights replicated over TP — needs them to fit);
+    #   "dp"      — experts fully replicated, tokens never move (optimal
+    #               when expert weights are tiny vs token volume).
+    moe_mode: str = "ep_a2a"
+
+    # ---- parameters -------------------------------------------------------
+
+    def param_spec(self, axes: Tuple[Optional[str], ...], mesh: Mesh,
+                   shape: Tuple[int, ...] = None, *,
+                   force_fsdp: bool = False) -> P:
+        names = list(mesh.axis_names)
+        dps = dp_axes(mesh)
+        used = set()
+        out = [None] * len(axes)
+
+        def assign(i, mesh_ax):
+            if mesh_ax is None or mesh_ax in used or mesh_ax not in names:
+                return
+            if shape is not None and shape[i] % _axsize(mesh, mesh_ax) != 0:
+                return
+            out[i] = mesh_ax
+            used.add(mesh_ax)
+
+        is_expert_tensor = "experts" in axes
+        # pass 1: experts -> EP (unless DP-replicated MoE)
+        if self.moe_mode != "dp":
+            for i, a in enumerate(axes):
+                if a == "experts":
+                    assign(i, self.ep_axis)
+        # pass 2: TP dims.  Expert tensors skip TP under "ep_ctp" (capacity
+        # is TP-sharded instead -> weights replicated over TP) and under
+        # "dp" (fully local expert compute).
+        skip_tp = is_expert_tensor and self.moe_mode in ("ep_ctp", "dp")
+        for i, a in enumerate(axes):
+            if a in TP_LOGICAL and out[i] is None and not skip_tp:
+                assign(i, self.tp_axis)
+        # pass 2b: row-parallel fallback — if TP could not be placed (e.g.
+        # 56 heads % 16 != 0), shard the "embed" (contraction) dim over the
+        # TP axis instead (Megatron row-parallel).  ONLY for tensors too
+        # large to replicate: row-parallel backward emits a d-sharded
+        # grad_x that must be all-gathered (measured 34 GB fp32 x2/layer on
+        # llama3 train when the tiny GQA wk/wv took this path — §Perf
+        # iteration 6); small weights (< 32 MiB bf16, e.g. 8 MiB GQA kv
+        # projections) are cheaper to replicate than to pay that gather.
+        import math as _m
+        big = shape is None or _m.prod(shape) * 2 >= 32 * 1024 * 1024
+        if self.tp_axis not in used and len(axes) >= 2 and big:
+            for i, a in enumerate(axes):
+                if a == "embed" and out[i] is None:
+                    assign(i, self.tp_axis)
+                    break
+        # pass 3: FSDP on "embed"
+        if self.fsdp or force_fsdp:
+            for i, a in enumerate(axes):
+                if a == "embed" and out[i] is None:
+                    free = tuple(ax for ax in dps if ax not in used)
+                    if free and (shape is None
+                                 or shape[i] % _prod(mesh, free) == 0):
+                        out[i] = free if len(free) > 1 else free[0]
+                        used.update(free)
+                    break
+        return P(*out)
+
+    def param_sharding_tree(self, logical_axes_tree, abstract_tree,
+                            mesh: Mesh, *, force_fsdp: bool = False):
+        """NamedSharding tree parallel to the params tree."""
+        return jax.tree.map(
+            lambda ax, ab: NamedSharding(
+                mesh, self.param_spec(ax, mesh, ab.shape,
+                                      force_fsdp=force_fsdp)),
+            logical_axes_tree, abstract_tree,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x))
+
+    def opt_sharding_tree(self, logical_axes_tree, abstract_tree, mesh: Mesh):
+        """ZeRO-1: optimizer moments additionally sharded over DP axes."""
+        return self.param_sharding_tree(logical_axes_tree, abstract_tree,
+                                        mesh, force_fsdp=self.zero1)
+
+    # ---- activations ------------------------------------------------------
+
+    def batch_axes(self, mesh: Mesh, global_batch: int):
+        dps = dp_axes(mesh)
+        if dps and global_batch % dp_size(mesh) == 0:
+            return dps if len(dps) > 1 else dps[0]
+        return None
+
+    # Megatron-style sequence parallelism for the residual stream: between
+    # blocks the activation's SEQ dim shards over TP, so norms/residuals
+    # compute seq-sharded and XLA materializes one bf16 all-gather into
+    # each matmul + reduce-scatter out, instead of keeping x replicated and
+    # all-gathering fp32 remat intermediates (§Perf iteration 7).
+    seq_parallel: bool = False   # refuted for GSPMD-auto (see §Perf iter. 7)
+
+    def act_spec(self, kind: str, mesh: Mesh, global_batch: int) -> P:
+        b = self.batch_axes(mesh, global_batch)
+        if kind == "btd":            # [B, S, d]
+            s = self.tp_axis if self.seq_parallel else None
+            return P(b, s, None)
+        if kind == "b1d":
+            return P(b, None, None)
+        if kind == "btv":            # logits
+            return P(b, None, self.tp_axis)
+        if kind == "bt":             # tokens / labels
+            return P(b, None)
+        if kind == "bpd":            # stub frontend embeddings
+            return P(b, None, None)
+        if kind == "b":
+            return P(b)
+        if kind == "gtd":            # grouped tokens [G, Tg, d] -> DP
+            return P(b, None, None)
+        if kind == "gecd_dp":        # dispatch buffers, group-sharded
+            return P(b, None, None, None)
+        if kind == "gecd_ep":        # dispatch buffers, expert-sharded
+            if self.moe_mode == "dp":
+                # groups stay on DP; capacity over TP (local expert math)
+                return P(b, None, self.tp_axis, None)
+            if self.moe_mode == "ep_ctp":
+                return P(None, self.ep_axis, self.tp_axis, None)
+            return P(None, self.ep_axis, None, None)
+        if kind == "gecf":           # expert hidden [G,E,C,f]
+            if self.moe_mode == "dp":
+                return P(b, None, self.tp_axis, None)
+            if self.moe_mode == "ep_ctp":
+                return P(None, self.ep_axis, self.tp_axis, None)
+            return P(None, self.ep_axis, None, self.tp_axis)
+        raise ValueError(kind)
+
+    def cache_seq_axes(self, mesh: Mesh, global_batch: int):
+        """Axes for the KV-cache sequence dim: whatever DP doesn't use,
+        always including the TP axis (flash-decode combine runs there)."""
+        b = self.batch_axes(mesh, global_batch)
+        used = set(b if isinstance(b, tuple) else ([b] if b else []))
+        axes = tuple(a for a in mesh.axis_names if a not in used)
+        return axes
+
+    def cache_spec_tree(self, cache_abstract, mesh: Mesh, global_batch: int):
+        """Shardings for the serve cache pytree (shape-keyed heuristics)."""
+        b = self.batch_axes(mesh, global_batch)
+        seq = self.cache_seq_axes(mesh, global_batch)
+
+        def fit(spec, shape):
+            """Drop spec entries whose mesh-axis size doesn't divide the dim."""
+            out = []
+            for i, ax in enumerate(spec):
+                if ax is None or shape[i] % _axsize(mesh, ax) == 0:
+                    out.append(ax)
+                else:
+                    out.append(None)
+            return P(*out)
+
+        def spec_for(path, leaf):
+            name = path[-1] if path else ""
+            nd = len(leaf.shape)
+            if name == "len":
+                return P(None, b)                       # [reps, B]
+            if name == "pos":
+                return P(b)                             # [B]
+            if name == "enc_out":
+                return P(b, None, None)                 # [B, F, d]
+            if name in ("k", "v"):                      # [reps,B,S,kvH,dh]
+                s = seq if len(seq) > 1 else (seq[0] if seq else None)
+                return fit(P(None, b, s, None, None), leaf.shape)
+            if name == "h":                             # [reps,B,di,N]
+                return fit(P(None, b, self.tp_axis, None), leaf.shape)
+            if name == "conv":                          # [reps,B,K,di]
+                return fit(P(None, b, None, self.tp_axis), leaf.shape)
+            if name == "wkv":                           # [reps,B,H,D,D]
+                return fit(P(None, b, self.tp_axis, None, None), leaf.shape)
+            if name == "shift":                         # [reps,B,1,d]
+                return fit(P(None, b, None, None), leaf.shape)
+            return P(*([None] * nd))
+
+        def walk(tree, path):
+            if isinstance(tree, dict):
+                return {k: walk(v, path + (k,)) for k, v in tree.items()}
+            if isinstance(tree, (list, tuple)):
+                t = [walk(v, path) for v in tree]
+                return type(tree)(t) if not isinstance(tree, list) else t
+            return NamedSharding(mesh, spec_for(path, tree))
+
+        return walk(cache_abstract, ())
+
+
+def _axsize(mesh: Mesh, ax) -> int:
+    if isinstance(ax, tuple):
+        return _prod(mesh, ax)
+    return mesh.shape[ax]
+
+
+def _prod(mesh: Mesh, axs) -> int:
+    out = 1
+    for a in axs:
+        out *= mesh.shape[a]
+    return out
+
+
+def make_constraint_fn(policy: Policy, mesh: Mesh, global_batch: int):
+    """The ``cs(x, kind)`` hook threaded through model code.
+
+    Shape-aware: spec entries whose mesh-axis size does not divide the dim
+    are dropped (e.g. 32 MoE experts on a 16-wide EP axis still shard; 6
+    experts would not).  Carries ``moe_groups`` (the DP degree) for the
+    GShard grouped dispatch."""
+    def cs(x, kind):
+        spec = policy.act_spec(kind, mesh, global_batch)
+        fitted = []
+        for i, ax in enumerate(spec):
+            if ax is None or i >= x.ndim:
+                fitted.append(None)
+            elif x.shape[i] % _axsize(mesh, ax) == 0:
+                fitted.append(ax)
+            else:
+                fitted.append(None)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*fitted)))
+    cs.moe_groups = (dp_size(mesh)
+                     if global_batch % max(dp_size(mesh), 1) == 0 else 1)
+    cs.moe_mode = policy.moe_mode
+    return cs
+
+
+def policy_for(arch_name: str) -> Policy:
+    """Per-arch distribution policy (DESIGN.md §6, EXPERIMENTS.md §Perf).
+
+    MoE modes per the arithmetic-intensity analysis of §Perf iteration 3:
+    * granite (32 tiny experts, top-8: weights/layer 100 MB vs >1 GB/device
+      token volume) -> "dp": replicate experts, never move tokens;
+    * phi3.5 (16 x 157 MB experts, 1/EP-shard fits a chip) -> "ep_ctp":
+      capacity over TP, no row-parallel all-reduce;
+    * jamba (348B of expert weights — must stay ffn-TP-sharded for HBM)
+      -> "ep_a2a".
+    """
+    if "jamba" in arch_name:
+        return Policy(fsdp=True, zero1=True, moe_mode="ep_a2a")
+    if "phi35" in arch_name:
+        return Policy(fsdp=True, zero1=True, moe_mode="ep_ctp")
+    if "granite" in arch_name:
+        return Policy(fsdp=False, zero1=True, moe_mode="dp")
+    return Policy(fsdp=False, zero1=True)

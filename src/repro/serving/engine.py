@@ -1,0 +1,129 @@
+"""Serving engine: continuous-batched decode with skiplist-backed tables.
+
+A deliberately complete (host-side) serving loop:
+* a **session table** (Foresight skiplist: request-id -> slot) and a
+  **paged KV page table** (kvcache.PageTable) form the data plane;
+* the model plane is the jitted ``prefill``/``decode_step`` from
+  ``repro.train.step`` factories (single host mesh here; the same factories
+  lower to the production mesh in the dry-run);
+* requests are admitted into free batch slots (continuous batching), decode
+  runs for the whole batch every step, finished sequences release pages.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import skiplist as sl
+from repro.models import transformer as T
+from repro.serving.kvcache import PagedCacheConfig, PageTable
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # [S] int32
+    max_new: int = 16
+    out: Optional[List[int]] = None
+    done: bool = False
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    batch_slots: int = 4
+    max_len: int = 128
+    page_tokens: int = 16
+    foresight: bool = True
+    eos_id: int = -1              # -1: run to max_new
+
+
+class ServeEngine:
+    def __init__(self, cfg: T.ModelConfig, params, ecfg: EngineConfig):
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = ecfg
+        self.sessions = sl.empty(1024, 12, foresight=ecfg.foresight)
+        self.pages = PageTable(PagedCacheConfig(
+            n_pages=ecfg.batch_slots * (ecfg.max_len // ecfg.page_tokens + 1),
+            page_tokens=ecfg.page_tokens, foresight=ecfg.foresight))
+        self.slots: List[Optional[Request]] = [None] * ecfg.batch_slots
+        self.cache = T.init_cache(cfg, params, ecfg.batch_slots, ecfg.max_len)
+        self.queue: List[Request] = []
+        self.steps = 0
+
+    # -- request plane ---------------------------------------------------------
+
+    def submit(self, req: Request):
+        req.out = []
+        self.queue.append(req)
+        self.sessions, _ = sl.insert(self.sessions, jnp.int32(req.rid),
+                                     jnp.int32(len(self.queue)))
+
+    def _admit(self):
+        for i in range(self.ecfg.batch_slots):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slots[i] = req
+                # prefill this slot (single-sequence prefill, batched pad)
+                toks = jnp.asarray(req.prompt, jnp.int32)[None]
+                logits, cache1 = T.prefill(self.cfg, self.params, toks,
+                                           self.ecfg.max_len)
+                self._splice_cache(i, cache1)
+                nxt = int(jnp.argmax(logits[0]))
+                req.out.append(nxt)
+                n_blocks = len(req.prompt) // self.ecfg.page_tokens + 1
+                self.pages.alloc(np.full(n_blocks, req.rid),
+                                 np.arange(n_blocks))
+
+    def _splice_cache(self, slot: int, cache1):
+        """Write a 1-sequence prefill cache into batch slot ``slot``."""
+        def splice(dst, src):
+            if dst.ndim >= 2 and dst.shape[1] == self.ecfg.batch_slots:
+                return dst.at[:, slot].set(src[:, 0])
+            return dst
+        blocks = [
+            {k: splice(self.cache["blocks"][i][k], cache1["blocks"][i][k])
+             for k in self.cache["blocks"][i]}
+            for i in range(len(self.cache["blocks"]))
+        ]
+        self.cache = dict(self.cache)
+        self.cache["blocks"] = blocks
+        self.cache["pos"] = self.cache["pos"].at[slot].set(cache1["pos"][0])
+
+    # -- decode plane ------------------------------------------------------------
+
+    def step(self) -> int:
+        """Admit + one decode step for all live slots. Returns #live."""
+        self._admit()
+        live = [i for i, r in enumerate(self.slots) if r is not None]
+        if not live:
+            return 0
+        toks = np.zeros((self.ecfg.batch_slots, 1), np.int32)
+        for i in live:
+            toks[i, 0] = self.slots[i].out[-1]
+        logits, self.cache = T.decode_step(
+            self.cfg, self.params, self.cache, jnp.asarray(toks))
+        nxt = np.asarray(jnp.argmax(logits, -1))
+        self.steps += 1
+        for i in live:
+            req = self.slots[i]
+            req.out.append(int(nxt[i]))
+            hit_eos = (self.ecfg.eos_id >= 0
+                       and int(nxt[i]) == self.ecfg.eos_id)
+            if len(req.out) >= req.max_new or hit_eos:
+                req.done = True
+                n_blocks = len(req.prompt) // self.ecfg.page_tokens + 1
+                self.pages.release(req.rid, n_blocks)
+                self.sessions, _ = sl.delete(self.sessions,
+                                             jnp.int32(req.rid))
+                self.slots[i] = None
+        return len([r for r in self.slots if r is not None])
+
+    def run(self, max_steps: int = 1000) -> None:
+        while (self.queue or any(s is not None for s in self.slots)) \
+                and self.steps < max_steps:
+            self.step()

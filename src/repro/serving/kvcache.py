@@ -1,0 +1,97 @@
+"""Paged KV-cache with a Foresight-skiplist page table.
+
+The serving-plane deployment of the paper (DESIGN.md §3): logical KV blocks
+of live sequences are mapped to physical pages of a fixed pool.  The page
+table is an ordered index over the composite key ``seq_id << 12 | block_id``
+— the lookup pattern of every decode step (find the pages of a sequence) and
+of eviction (range-delete a sequence's pages) is exactly the skiplist
+read/update workload the paper accelerates.  Lookups are batched foresight
+traversals; the variant (base / foresight / kernel) is selectable so the
+macrobenchmark can compare them under a realistic serving key distribution.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import skiplist as sl
+from repro.kernels import ops as kops
+
+BLOCK_BITS = 12                  # up to 4096 blocks per sequence
+MAX_SEQS = 1 << 18
+
+
+def page_key(seq_id, block_id):
+    return (seq_id << BLOCK_BITS) | block_id
+
+
+@dataclasses.dataclass
+class PagedCacheConfig:
+    n_pages: int = 4096
+    page_tokens: int = 16
+    levels: int = 16
+    foresight: bool = True
+    use_kernel: bool = False
+    seed: int = 0
+
+
+class PageTable:
+    """Ordered (seq, block) -> physical page index, skiplist-backed."""
+
+    def __init__(self, cfg: PagedCacheConfig):
+        self.cfg = cfg
+        cap = int(2 ** np.ceil(np.log2(cfg.n_pages * 2 + 4)))
+        self.index = sl.empty(cap, cfg.levels, foresight=cfg.foresight,
+                              seed=cfg.seed)
+        self.free = list(range(cfg.n_pages - 1, -1, -1))
+
+    # -- allocation -----------------------------------------------------------
+
+    def alloc(self, seq_ids: np.ndarray, block_ids: np.ndarray
+              ) -> np.ndarray:
+        """Allocate physical pages for (seq, block) pairs; returns pages."""
+        n = len(seq_ids)
+        if n > len(self.free):
+            raise RuntimeError("KV page pool exhausted")
+        pages = np.array([self.free.pop() for _ in range(n)], np.int32)
+        keys = page_key(seq_ids.astype(np.int64),
+                        block_ids.astype(np.int64)).astype(np.int32)
+        ops = jnp.full((n,), sl.OP_INSERT, jnp.int32)
+        self.index, _ = sl.apply_ops(self.index, ops,
+                                     jnp.asarray(keys), jnp.asarray(pages))
+        return pages
+
+    def lookup(self, seq_ids: np.ndarray, block_ids: np.ndarray
+               ) -> Tuple[jax.Array, jax.Array]:
+        """Batched page lookup -> (found, physical_pages)."""
+        keys = jnp.asarray(page_key(seq_ids.astype(np.int64),
+                                    block_ids.astype(np.int64))
+                           .astype(np.int32))
+        if self.cfg.use_kernel:
+            r = kops.search_kernel(self.index, keys)
+            return r.found, r.vals
+        return sl.search_fast(self.index, keys)   # preds-free read path
+
+    def release(self, seq_id: int, n_blocks: int) -> int:
+        """Free all pages of a finished sequence (ordered range delete)."""
+        blocks = np.arange(n_blocks, dtype=np.int64)
+        keys = page_key(np.int64(seq_id), blocks).astype(np.int32)
+        found, pages = self.lookup(np.full(n_blocks, seq_id), blocks)
+        ops = jnp.full((n_blocks,), sl.OP_DELETE, jnp.int32)
+        self.index, results = sl.apply_ops(
+            self.index, ops, jnp.asarray(keys), jnp.zeros(n_blocks, jnp.int32))
+        freed = 0
+        fnp, pnp = np.asarray(found), np.asarray(pages)
+        for f, p in zip(fnp, pnp):
+            if f:
+                self.free.append(int(p))
+                freed += 1
+        return freed
+
+    @property
+    def n_live(self) -> int:
+        return int(self.index.n)

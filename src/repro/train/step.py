@@ -1,0 +1,178 @@
+"""jit-compiled step factories: train / prefill / decode, fully sharded.
+
+Each factory returns (fn, in_shardings, out_shardings, abstract_inputs) so
+the same machinery serves real execution (examples, smoke tests on the host
+mesh) and the 512-device dry-run (``.lower().compile()`` on abstract
+inputs).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import transformer as T
+from repro.optim import adamw
+from repro.parallel.decode_attn import make_distributed_decode_attn
+from repro.parallel.sharding import Policy, make_constraint_fn
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Input specs (abstract stand-ins, the dry-run contract)
+# ---------------------------------------------------------------------------
+
+def train_input_specs(cfg: T.ModelConfig, global_batch: int, seq_len: int
+                      ) -> Dict[str, jax.ShapeDtypeStruct]:
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32),
+    }
+    if cfg.family in ("vlm", "audio"):
+        specs["extra"] = jax.ShapeDtypeStruct(
+            (global_batch, cfg.n_extra_embeds, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def prefill_input_specs(cfg: T.ModelConfig, global_batch: int, seq_len: int
+                        ) -> Dict[str, jax.ShapeDtypeStruct]:
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32),
+    }
+    if cfg.family in ("vlm", "audio"):
+        specs["extra"] = jax.ShapeDtypeStruct(
+            (global_batch, cfg.n_extra_embeds, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def decode_input_specs(cfg: T.ModelConfig, global_batch: int
+                       ) -> Dict[str, jax.ShapeDtypeStruct]:
+    return {
+        "tokens": jax.ShapeDtypeStruct((global_batch, 1), jnp.int32),
+    }
+
+
+def batch_shardings(cfg: T.ModelConfig, policy: Policy, mesh: Mesh,
+                    global_batch: int, kinds: Dict[str, str]):
+    return {
+        k: NamedSharding(mesh, policy.act_spec(kind, mesh, global_batch))
+        for k, kind in kinds.items()
+    }
+
+
+def _logits_sharding(cfg: T.ModelConfig, policy: Policy, mesh: Mesh,
+                     global_batch: int) -> NamedSharding:
+    """[B, vocab] output; vocab shards over TP only when divisible."""
+    b = policy.batch_axes(mesh, global_batch)
+    v = policy.tp_axis if cfg.vocab % mesh.shape[policy.tp_axis] == 0 else None
+    return NamedSharding(mesh, P(b, v))
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: T.ModelConfig, policy: Policy, mesh: Mesh,
+                    global_batch: int, opt_cfg: adamw.AdamWConfig):
+    """Returns (jitted_fn, (params_shd, opt_shd, batch_shd))."""
+    cs = make_constraint_fn(policy, mesh, global_batch)
+
+    axes = T.param_logical_axes(cfg)
+    abstract = T.abstract_params(cfg)
+    params_shd = policy.param_sharding_tree(axes, abstract, mesh)
+    opt_abs = adamw.abstract_state(opt_cfg, abstract)
+    mu_shd = policy.opt_sharding_tree(axes, abstract, mesh)
+    nu_shd = policy.opt_sharding_tree(axes, abstract, mesh)
+    opt_shd = adamw.AdamWState(
+        mu=mu_shd, nu=nu_shd,
+        count=NamedSharding(mesh, P()))
+
+    kinds = {"tokens": "bt", "labels": "bt"}
+    if cfg.family in ("vlm", "audio"):
+        kinds["extra"] = "bpd"
+    batch_shd = batch_shardings(cfg, policy, mesh, global_batch, kinds)
+
+    def train_step(params, opt_state, batch):
+        def loss(p):
+            return T.loss_fn(cfg, p, batch["tokens"], batch["labels"],
+                             batch.get("extra"), cs=cs)
+
+        (loss_val, parts), grads = jax.value_and_grad(
+            loss, has_aux=True)(params)
+        new_params, new_opt, om = adamw.update(opt_cfg, grads, opt_state,
+                                               params)
+        metrics = {"loss": loss_val, **parts, **om}
+        return new_params, new_opt, metrics
+
+    fn = jax.jit(
+        train_step,
+        in_shardings=(params_shd, opt_shd, batch_shd),
+        out_shardings=(params_shd, opt_shd, None),
+        donate_argnums=(0, 1),
+    )
+    return fn, (params_shd, opt_shd, batch_shd), (abstract, opt_abs)
+
+
+# ---------------------------------------------------------------------------
+# Serve steps
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: T.ModelConfig, policy: Policy, mesh: Mesh,
+                      global_batch: int, seq_len: int, max_len: int):
+    if cfg.family == "vlm":
+        # image patches are prepended to the sequence -> cache must hold them
+        max_len = max(max_len, seq_len + cfg.n_extra_embeds)
+    cs = make_constraint_fn(policy, mesh, global_batch)
+    axes = T.param_logical_axes(cfg)
+    abstract = T.abstract_params(cfg)
+    params_shd = policy.param_sharding_tree(axes, abstract, mesh)
+    kinds = {"tokens": "bt"}
+    if cfg.family in ("vlm", "audio"):
+        kinds["extra"] = "bpd"
+    batch_shd = batch_shardings(cfg, policy, mesh, global_batch, kinds)
+    cache_abs = T.init_cache(cfg, abstract, global_batch, max_len,
+                             abstract=True)
+    cache_shd = policy.cache_spec_tree(cache_abs, mesh, global_batch)
+    logits_shd = _logits_sharding(cfg, policy, mesh, global_batch)
+
+    def prefill_step(params, batch):
+        return T.prefill(cfg, params, batch["tokens"], max_len,
+                         batch.get("extra"), cs=cs)
+
+    fn = jax.jit(prefill_step,
+                 in_shardings=(params_shd, batch_shd),
+                 out_shardings=(logits_shd, cache_shd))
+    return fn, (params_shd, batch_shd, cache_shd), (abstract, cache_abs)
+
+
+def make_decode_step(cfg: T.ModelConfig, policy: Policy, mesh: Mesh,
+                     global_batch: int, max_len: int):
+    """One-token decode against a KV/state cache of length up to max_len."""
+    cs = make_constraint_fn(policy, mesh, global_batch)
+    axes = T.param_logical_axes(cfg)
+    abstract = T.abstract_params(cfg)
+    params_shd = policy.param_sharding_tree(axes, abstract, mesh)
+    cache_abs = T.init_cache(cfg, abstract, global_batch, max_len,
+                             abstract=True)
+    cache_shd = policy.cache_spec_tree(cache_abs, mesh, global_batch)
+    tok_shd = {"tokens": NamedSharding(
+        mesh, policy.act_spec("bt", mesh, global_batch))}
+    logits_shd = _logits_sharding(cfg, policy, mesh, global_batch)
+
+    seq_axes = policy.cache_seq_axes(mesh, global_batch)
+    dattn = make_distributed_decode_attn(
+        mesh, policy.batch_axes(mesh, global_batch), seq_axes)
+
+    def decode_fn(params, cache, batch):
+        return T.decode_step(cfg, params, cache, batch["tokens"], cs=cs,
+                             decode_attn_fn=dattn)
+
+    fn = jax.jit(decode_fn,
+                 in_shardings=(params_shd, cache_shd, tok_shd),
+                 out_shardings=(logits_shd, cache_shd),
+                 donate_argnums=(1,))
+    return fn, (params_shd, cache_shd, tok_shd), (abstract, cache_abs)

@@ -1,0 +1,127 @@
+"""Unit tests for the scan-aware HLO analyzer (benchmarks/hlo_analysis.py).
+
+These pin the parser against hand-written HLO snippets (the file format the
+roofline depends on) and validate trip-count scaling against a real compile.
+"""
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.hlo_analysis import (Analyzer, _operand_names, _tokenize_op,
+                                     analyze, dot_flops, parse_hlo,
+                                     shape_elems_bytes)
+
+SNIPPET = """
+HloModule test
+
+%inner (p0: f32[4,8], p1: f32[8,16]) -> f32[4,16] {
+  %p0 = f32[4,8]{1,0} parameter(0)
+  %p1 = f32[8,16]{1,0} parameter(1)
+  ROOT %dot.1 = f32[4,16]{1,0} dot(%p0, %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+
+%body (arg: (s32[], f32[4,16])) -> (s32[], f32[4,16]) {
+  %arg = (s32[], f32[4,16]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %x = f32[4,16]{1,0} get-tuple-element(%arg), index=1
+  %c1 = s32[] constant(1)
+  %ip = s32[] add(%i, %c1)
+  %w = f32[16,16]{1,0} constant({...})
+  %dot.2 = f32[4,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[4,16]{1,0} all-reduce(%dot.2), replica_groups={}, to_apply=%sum
+  ROOT %t = (s32[], f32[4,16]{1,0}) tuple(%ip, %ar)
+}
+
+%cond (arg: (s32[], f32[4,16])) -> pred[] {
+  %arg = (s32[], f32[4,16]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %n = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+%sum (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (x: f32[4,8], y: f32[8,16]) -> f32[4,16] {
+  %x = f32[4,8]{1,0} parameter(0)
+  %y = f32[8,16]{1,0} parameter(1)
+  %f = f32[4,16]{1,0} fusion(%x, %y), kind=kOutput, calls=%inner
+  %init = (s32[], f32[4,16]{1,0}) tuple(%x, %f)
+  %loop = (s32[], f32[4,16]{1,0}) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[4,16]{1,0} get-tuple-element(%loop), index=1
+}
+"""
+
+
+def test_tokenize_simple_and_tuple_types():
+    op = _tokenize_op("  %dot.1 = f32[4,16]{1,0} dot(%a, %b), "
+                      "lhs_contracting_dims={1}")
+    assert op.opcode == "dot" and op.name == "dot.1"
+    op2 = _tokenize_op("  %t = (s32[], f32[4,16]{1,0}, /*index=2*/pred[8]) "
+                       "tuple(%a, %b, %c)")
+    assert op2.opcode == "tuple"
+    assert "pred[8]" in op2.rtype
+
+
+def test_operand_names_stop_at_close_paren():
+    names = _operand_names("%a, %b), lhs_contracting_dims={1}, calls=%zzz")
+    assert names == ["a", "b"]
+
+
+def test_shape_bytes():
+    elems, b = shape_elems_bytes("(f32[4,16]{1,0}, bf16[8])")
+    assert elems == 64 + 8
+    assert b == 64 * 4 + 8 * 2
+
+
+def test_parse_and_flops_with_trip_count():
+    comps = parse_hlo(SNIPPET)
+    assert set(comps) >= {"inner", "body", "cond", "sum", "main"}
+    a = Analyzer(SNIPPET)
+    # trip count from %cond's constant(7)
+    assert a.trip_count("cond") == 7
+    r = analyze(SNIPPET)
+    # fusion dot: 2*4*16*8 = 1024; loop dot: 2*4*16*16 = 2048 x 7 trips
+    assert r["flops_per_device"] == 1024 + 7 * 2048
+    # all-reduce inside loop: 4*16*4 bytes x 7
+    assert r["collective_bytes_per_device"] == 7 * 4 * 16 * 4
+
+
+def test_dot_flops_uses_symbol_table():
+    comps = parse_hlo(SNIPPET)
+    inner = comps["inner"]
+    dot = [o for o in inner.ops if o.opcode == "dot"][0]
+    assert dot_flops(dot, inner) == 2 * 4 * 16 * 8
+
+
+def test_real_compile_scan_scaling():
+    """flops of scan(n=K body) scale ~K x the single-body count."""
+    import jax
+    import jax.numpy as jnp
+
+    def step(c, _):
+        return c @ w, None
+
+    w = jnp.ones((32, 32), jnp.float32)
+
+    def f5(x):
+        y, _ = jax.lax.scan(step, x, None, length=5)
+        return y
+
+    def f10(x):
+        y, _ = jax.lax.scan(step, x, None, length=10)
+        return y
+
+    x = jax.ShapeDtypeStruct((8, 32), jnp.float32)
+    h5 = jax.jit(f5).lower(x).compile().as_text()
+    h10 = jax.jit(f10).lower(x).compile().as_text()
+    r5 = analyze(h5)
+    r10 = analyze(h10)
+    assert r5["flops_per_device"] > 0
+    assert abs(r10["flops_per_device"] / r5["flops_per_device"] - 2.0) < 0.2

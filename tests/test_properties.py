@@ -1,0 +1,122 @@
+"""Hypothesis property tests — the system's invariants.
+
+1. Set semantics: any op sequence applied to the skiplist matches DictOracle.
+2. Foresight invariant: fused (ptr, key) records always satisfy
+   next_key == keys[next_ptr] after arbitrary updates (paper §3.1).
+3. Optimistic-Validation correctness: for ARBITRARY corruption of the
+   foreseen-key lane, validated search equals ground truth (paper §3.2 —
+   Reckless Advance is caught by validation; Premature Descent at level 0 is
+   impossible because level 0 ignores foresight).
+4. Versioned reads: mixed-view searches (stale fused + fresh keys) return
+   fresh-version results.
+"""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import skiplist as sl
+from repro.core.oracle import DictOracle
+from repro.core.validated import search_validated
+from repro.core.versioned import VersionedIndex
+
+SET = settings(max_examples=25, deadline=None,
+               suppress_health_check=[HealthCheck.too_slow])
+
+ops_strategy = st.lists(
+    st.tuples(st.integers(0, 2), st.integers(0, 120)),
+    min_size=1, max_size=80)
+
+
+@SET
+@given(ops=ops_strategy, foresight=st.booleans())
+def test_matches_dict_oracle(ops, foresight):
+    state = sl.empty(512, 10, foresight=foresight)
+    oracle = DictOracle()
+    t = jnp.asarray([o[0] for o in ops], jnp.int32)
+    k = jnp.asarray([o[1] + 1 for o in ops], jnp.int32)
+    v = k * 3
+    state, _ = sl.apply_ops(state, t, k, v)
+    for tt, kk in ops:
+        if tt == sl.OP_INSERT:
+            oracle.insert(kk + 1, (kk + 1) * 3)
+        elif tt == sl.OP_DELETE:
+            oracle.delete(kk + 1)
+    got = np.asarray(sl.to_sorted_keys(state, 200))
+    got = got[got != np.int32(2**31 - 1)].tolist()
+    assert got == oracle.sorted_keys()
+    # searches agree everywhere in the key domain
+    qs = jnp.arange(1, 130, dtype=jnp.int32)
+    res = sl.search(state, qs)
+    for i, q in enumerate(range(1, 130)):
+        f, val = oracle.search(q)
+        assert bool(res.found[i]) == f
+        if f:
+            assert int(res.vals[i]) == val
+
+
+@SET
+@given(ops=ops_strategy)
+def test_foresight_invariant_under_updates(ops):
+    state = sl.empty(512, 10, foresight=True)
+    t = jnp.asarray([o[0] for o in ops], jnp.int32)
+    k = jnp.asarray([o[1] + 1 for o in ops], jnp.int32)
+    state, _ = sl.apply_ops(state, t, k, k)
+    assert bool(sl.check_foresight_invariant(state))
+
+
+@SET
+@given(
+    n=st.integers(10, 200),
+    corrupt_frac=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**16),
+)
+def test_validated_search_correct_under_any_corruption(n, corrupt_frac, seed):
+    """THE paper-correctness property: validation defeats torn foresight."""
+    rng = np.random.default_rng(seed)
+    keys = np.sort(rng.choice(10000, n, replace=False)).astype(np.int32)
+    state = sl.build(jnp.asarray(keys), jnp.asarray(keys),
+                     capacity=512, levels=10, foresight=True,
+                     seed=seed % 7)
+    fused = np.asarray(state.fused).copy()
+    mask = rng.random(fused[..., 1].shape) < corrupt_frac
+    fused[..., 1] = np.where(
+        mask, rng.integers(-2**31 + 1, 2**31 - 1, fused[..., 1].shape),
+        fused[..., 1])
+    q = rng.integers(0, 10001, 64).astype(np.int32)
+    res = search_validated(jnp.asarray(fused), state.keys, state.vals,
+                           jnp.asarray(q))
+    kset = set(keys.tolist())
+    expect = np.array([int(x) in kset for x in q])
+    np.testing.assert_array_equal(np.asarray(res.found), expect)
+    np.testing.assert_array_equal(np.asarray(res.vals)[expect], q[expect])
+
+
+@SET
+@given(seed=st.integers(0, 2**16))
+def test_versioned_mixed_view_reads(seed):
+    """Mixed-view (lag=1) semantics: reads linearize at the stale version
+    for inserts — stale pointers cannot reach fresh nodes, exactly like a
+    reader whose traversal linearized before the concurrent insert (the
+    paper's EBR reader).  Validation guarantees no FALSE positives/negatives
+    w.r.t. that linearization point."""
+    rng = np.random.default_rng(seed)
+    keys = np.sort(rng.choice(5000, 64, replace=False)).astype(np.int32)
+    state = sl.build(jnp.asarray(keys), jnp.asarray(keys), capacity=256,
+                     levels=10, foresight=True)
+    vi = VersionedIndex(state, history=4)
+    stale = set(keys.tolist())
+    # fold a pure-insert update batch -> new version
+    newk = rng.choice(5000, 16, replace=False).astype(np.int32)
+    vi.update(jnp.full((16,), sl.OP_INSERT, jnp.int32),
+              jnp.asarray(newk), jnp.asarray(newk * 2))
+    q = rng.integers(0, 5001, 64).astype(np.int32)
+    res = vi.search(jnp.asarray(q), lag=1)
+    expect = np.array([int(x) in stale for x in q])
+    np.testing.assert_array_equal(np.asarray(res.found), expect)
+    # an unlagged read sees the current version exactly
+    cur = set(np.asarray(sl.to_sorted_keys(vi.current, 200)).tolist())
+    cur.discard(2**31 - 1)
+    res2 = vi.search(jnp.asarray(q), lag=0)
+    expect2 = np.array([int(x) in cur for x in q])
+    np.testing.assert_array_equal(np.asarray(res2.found), expect2)

@@ -1,0 +1,98 @@
+"""Serving: paged KV page table, sessions, continuous-batched engine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.models import transformer as T
+from repro.serving.engine import EngineConfig, Request, ServeEngine
+from repro.serving.kvcache import PagedCacheConfig, PageTable
+
+
+def test_page_table_alloc_lookup_release():
+    pt = PageTable(PagedCacheConfig(n_pages=64))
+    pages = pt.alloc(np.array([7, 7, 7, 9]), np.array([0, 1, 2, 0]))
+    assert len(set(pages.tolist())) == 4
+    found, got = pt.lookup(np.array([7, 7, 9, 7]), np.array([1, 0, 0, 5]))
+    f = np.asarray(found)
+    assert f.tolist() == [True, True, True, False]
+    assert int(got[0]) == int(pages[1])
+    freed = pt.release(7, 3)
+    assert freed == 3
+    found, _ = pt.lookup(np.array([7]), np.array([0]))
+    assert not bool(found[0])
+    assert pt.n_live == 1
+
+
+def test_page_table_pool_exhaustion():
+    pt = PageTable(PagedCacheConfig(n_pages=4))
+    pt.alloc(np.array([1, 1]), np.array([0, 1]))
+    with pytest.raises(RuntimeError):
+        pt.alloc(np.array([2, 2, 2]), np.array([0, 1, 2]))
+
+
+def test_page_table_pages_recycled():
+    pt = PageTable(PagedCacheConfig(n_pages=8))
+    p1 = pt.alloc(np.array([1, 1]), np.array([0, 1]))
+    pt.release(1, 2)
+    p2 = pt.alloc(np.array([2, 2]), np.array([0, 1]))
+    assert set(p2.tolist()) == set(p1.tolist())
+
+
+def test_engine_end_to_end_generates():
+    cfg = get_smoke("llama3_8b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, EngineConfig(batch_slots=2, max_len=64))
+    rng = np.random.default_rng(0)
+    for rid in range(4):
+        eng.submit(Request(rid=rid + 1,
+                           prompt=rng.integers(0, cfg.vocab, 8,
+                                               dtype=np.int32),
+                           max_new=6))
+    eng.run(max_steps=100)
+    # all requests finished with the requested number of tokens
+    assert all(s is None for s in eng.slots)
+    assert eng.pages.n_live == 0            # every page released
+    assert int(eng.sessions.n) == 0         # every session closed
+
+
+def test_engine_continuous_batching_admits_from_queue():
+    cfg = get_smoke("llama3_8b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, EngineConfig(batch_slots=1, max_len=64))
+    rng = np.random.default_rng(1)
+    eng.submit(Request(rid=1, prompt=rng.integers(0, cfg.vocab, 4,
+                                                  dtype=np.int32), max_new=3))
+    eng.submit(Request(rid=2, prompt=rng.integers(0, cfg.vocab, 4,
+                                                  dtype=np.int32), max_new=3))
+    eng.run(max_steps=50)
+    assert eng.pages.n_live == 0
+
+
+def test_engine_decode_matches_manual_decode():
+    """Engine greedy output == manual prefill+decode for the same prompt."""
+    cfg = get_smoke("llama3_8b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(0, cfg.vocab, 8, dtype=np.int32)
+
+    eng = ServeEngine(cfg, params, EngineConfig(batch_slots=1, max_len=64))
+    eng.submit(Request(rid=1, prompt=prompt, max_new=4))
+    eng.run(max_steps=20)
+
+    toks = jnp.asarray(prompt)[None]
+    logits, cache = T.prefill(cfg, params, toks, max_len=64)
+    manual = [int(jnp.argmax(logits[0]))]
+    for _ in range(3):
+        nxt = jnp.asarray([[manual[-1]]], jnp.int32)
+        logits, cache = T.decode_step(cfg, params, cache, nxt)
+        manual.append(int(jnp.argmax(logits[0])))
+    # engine stores its generations on the finished request
+    # (slots cleared, so re-submit pattern: track via closure)
+    # -> simpler: regenerate and compare against a fresh engine run
+    eng2 = ServeEngine(cfg, params, EngineConfig(batch_slots=1, max_len=64))
+    req = Request(rid=9, prompt=prompt, max_new=4)
+    eng2.submit(req)
+    eng2.run(max_steps=20)
+    assert req.out == manual

@@ -1,0 +1,202 @@
+"""Core skiplist: construction, search, updates, invariants, oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import skiplist as sl
+from repro.core.oracle import DictOracle, PySkipList
+
+
+def _build(n=200, cap=1024, levels=12, foresight=True, seed=0, span=100000):
+    rng = np.random.default_rng(seed)
+    keys = np.sort(rng.choice(span, n, replace=False)).astype(np.int32)
+    st = sl.build(jnp.asarray(keys), jnp.asarray(keys * 2),
+                  capacity=cap, levels=levels, foresight=foresight, seed=seed)
+    return st, keys
+
+
+@pytest.mark.parametrize("foresight", [True, False])
+def test_build_and_search(foresight):
+    st, keys = _build(foresight=foresight)
+    kset = set(keys.tolist())
+    rng = np.random.default_rng(1)
+    q = rng.integers(0, 100001, 500).astype(np.int32)
+    res = sl.search(st, jnp.asarray(q))
+    expect = np.array([int(k) in kset for k in q])
+    np.testing.assert_array_equal(np.asarray(res.found), expect)
+    np.testing.assert_array_equal(np.asarray(res.vals)[expect],
+                                  q[expect] * 2)
+
+
+@pytest.mark.parametrize("foresight", [True, False])
+def test_search_boundary_keys(foresight):
+    st, keys = _build(foresight=foresight)
+    # smallest, largest, below-min, above-max
+    q = jnp.asarray(np.array([keys[0], keys[-1], 0, 2**30], np.int32))
+    res = sl.search(st, q)
+    assert bool(res.found[0]) and bool(res.found[1])
+    assert not bool(res.found[2]) or 0 in set(keys.tolist())
+    assert not bool(res.found[3])
+
+
+def test_foresight_invariant_after_build():
+    st, _ = _build(foresight=True)
+    assert bool(sl.check_foresight_invariant(st))
+
+
+def test_foresight_gather_count_is_half_of_base():
+    """The paper's mechanism: 1 dependent gather/step vs 2."""
+    st_f, keys = _build(foresight=True)
+    st_b, _ = _build(foresight=False)
+    q = jnp.asarray(keys[:128])
+    rf = sl.search(st_f, q)
+    rb = sl.search(st_b, q)
+    assert int(rf.steps) == int(rb.steps)          # identical traversal
+    assert int(rb.gathers) == 2 * int(rf.gathers)  # half the gathers
+
+
+def test_insert_delete_roundtrip():
+    st, keys = _build(foresight=True, cap=2048)
+    new = jnp.int32(999999)
+    st, ok = sl.insert(st, new, jnp.int32(42))
+    assert bool(ok)
+    assert bool(sl.check_foresight_invariant(st))
+    r = sl.search(st, new[None])
+    assert bool(r.found[0]) and int(r.vals[0]) == 42
+    st, ok = sl.delete(st, new)
+    assert bool(ok)
+    assert not bool(sl.search(st, new[None]).found[0])
+    assert bool(sl.check_foresight_invariant(st))
+
+
+def test_insert_existing_is_upsert():
+    st, keys = _build()
+    k = jnp.int32(int(keys[10]))
+    st, inserted = sl.insert(st, k, jnp.int32(777))
+    assert not bool(inserted)
+    assert int(sl.search(st, k[None]).vals[0]) == 777
+
+
+def test_delete_missing_fails():
+    st, _ = _build()
+    st2, ok = sl.delete(st, jnp.int32(999998))
+    assert not bool(ok)
+    assert int(st2.n) == int(st.n)
+
+
+def test_slot_reuse_after_delete():
+    st, keys = _build(cap=512)
+    bump_before = int(st.bump)
+    st, _ = sl.delete(st, jnp.int32(int(keys[0])))
+    st, _ = sl.insert(st, jnp.int32(123456), jnp.int32(1))
+    assert int(st.bump) == bump_before       # freelist slot was recycled
+    assert bool(sl.check_foresight_invariant(st))
+
+
+@pytest.mark.parametrize("foresight", [True, False])
+def test_mixed_ops_vs_dict_oracle(foresight):
+    rng = np.random.default_rng(3)
+    st = sl.empty(2048, 12, foresight=foresight)
+    oracle = DictOracle()
+    ops, ks, vs = [], [], []
+    for _ in range(300):
+        t = int(rng.integers(0, 3))
+        k = int(rng.integers(0, 500))
+        ops.append(t)
+        ks.append(k)
+        vs.append(k * 7)
+    st, _ = sl.apply_ops(st, jnp.asarray(ops, jnp.int32),
+                         jnp.asarray(ks, jnp.int32),
+                         jnp.asarray(vs, jnp.int32))
+    for t, k, v in zip(ops, ks, vs):
+        if t == sl.OP_INSERT:
+            oracle.insert(k, v)
+        elif t == sl.OP_DELETE:
+            oracle.delete(k)
+    got = np.asarray(sl.to_sorted_keys(st, 600))
+    got = got[got != np.int32(2**31 - 1)].tolist()
+    assert got == oracle.sorted_keys()
+    if foresight:
+        assert bool(sl.check_foresight_invariant(st))
+
+
+def test_python_skiplist_oracle_matches_dict():
+    """The structural oracle itself must be correct + keep the invariant."""
+    rng = np.random.default_rng(4)
+    py = PySkipList(levels=12, seed=1)
+    oracle = DictOracle()
+    for _ in range(500):
+        t = int(rng.integers(0, 3))
+        k = int(rng.integers(0, 300))
+        if t == 0:
+            assert py.search(k)[0] == oracle.search(k)[0]
+        elif t == 1:
+            py.insert(k, k)
+            oracle.insert(k, k)
+        else:
+            assert py.delete(k) == oracle.delete(k)
+    assert py.sorted_keys() == oracle.sorted_keys()
+    assert py.check_foresight_invariant()
+
+
+def test_paper_access_reduction_estimate():
+    """Paper §3: foresight cuts node accesses ~40-50% on large lists."""
+    rng = np.random.default_rng(5)
+    keys = rng.choice(2**20, 4096, replace=False)
+    base, fore = PySkipList(12, 1), PySkipList(12, 1)
+    for k in keys:
+        base.insert(int(k), 0)
+        fore.insert(int(k), 0)
+    q = rng.integers(0, 2**20, 2000)
+    for x in q:
+        base.search(int(x), foresight=False)
+    for x in q:
+        fore.search(int(x), foresight=True)
+    reduction = 1.0 - fore.accesses / base.accesses
+    # Array-based towers: paper predicts ~50% fewer NEW accesses per upper
+    # level; amortized over whole traversals (incl. the level-0 walk and
+    # the final candidate visit) we measure ~20-30%, in line with the
+    # paper's observed 20-45% throughput gains.
+    assert 0.15 < reduction < 0.6, f"access reduction {reduction:.2f}"
+
+
+def test_empty_and_single_element():
+    st = sl.empty(64, 8, foresight=True)
+    assert not bool(sl.search(st, jnp.asarray([5], jnp.int32)).found[0])
+    st, ok = sl.insert(st, jnp.int32(5), jnp.int32(50))
+    assert bool(ok)
+    assert bool(sl.search(st, jnp.asarray([5], jnp.int32)).found[0])
+    assert bool(sl.check_foresight_invariant(st))
+
+
+def test_capacity_exhaustion_fails_gracefully():
+    st = sl.empty(8, 4, foresight=True)   # room for 6 elements
+    inserted = 0
+    for k in range(10):
+        st, ok = sl.insert(st, jnp.int32(k + 1), jnp.int32(k))
+        inserted += int(ok)
+    assert inserted == 6
+    assert bool(sl.check_foresight_invariant(st))
+
+
+@pytest.mark.parametrize("foresight", [True, False])
+def test_range_scan(foresight):
+    st, keys = _build(foresight=foresight)
+    lo, hi = int(keys[20]), int(keys[40])
+    ks, vs, count = sl.range_scan(st, jnp.int32(lo), jnp.int32(hi), 64)
+    expect = [int(k) for k in keys if lo <= k < hi]
+    got = np.asarray(ks)[:int(count)].tolist()
+    assert got == expect
+    assert (np.asarray(vs)[:int(count)] == np.array(expect) * 2).all()
+
+
+def test_range_scan_empty_and_truncated():
+    st, keys = _build(foresight=True)
+    ks, vs, count = sl.range_scan(st, jnp.int32(1), jnp.int32(2), 16)
+    assert int(count) == 0 or 1 in set(keys.tolist())
+    # truncation: tiny max_out
+    lo, hi = int(keys[0]), int(keys[-1]) + 1
+    ks, vs, count = sl.range_scan(st, jnp.int32(lo), jnp.int32(hi), 8)
+    assert int(count) == 8
+    assert np.asarray(ks).tolist() == keys[:8].tolist()

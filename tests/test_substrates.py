@@ -1,0 +1,187 @@
+"""Data pipeline, checkpointing, fault-tolerance runtime, optimizer."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import DataPipeline, PipelineConfig
+from repro.data.store import IndexedSampleStore, StoreConfig
+from repro.optim import adamw
+from repro.runtime import ft
+
+
+# ---- data ------------------------------------------------------------------
+
+def test_store_lookup_roundtrip():
+    store = IndexedSampleStore(StoreConfig(n_samples=256, seq_len=32))
+    keys = jnp.asarray(store.keys_np[:64], jnp.int32)
+    rows, found = store.get_batch(keys)
+    assert bool(jnp.all(found))
+    assert rows.shape == (64, 33)
+
+
+def test_store_ingest_evict():
+    store = IndexedSampleStore(StoreConfig(n_samples=128, seq_len=16))
+    newk = jnp.asarray([2**29 + 1, 2**29 + 2], jnp.int32)
+    store.ingest(newk, jnp.asarray([0, 1], jnp.int32))
+    found, _ = store.lookup(newk)
+    assert bool(jnp.all(found))
+    store.evict(newk)
+    found, _ = store.lookup(newk)
+    assert not bool(jnp.any(found))
+
+
+def test_pipeline_deterministic_across_restarts():
+    store = IndexedSampleStore(StoreConfig(n_samples=256, seq_len=32))
+    p1 = DataPipeline(store, PipelineConfig(global_batch=8, seed=5))
+    p2 = DataPipeline(store, PipelineConfig(global_batch=8, seed=5))
+    for step in (0, 3, 17):
+        np.testing.assert_array_equal(p1.batch_keys(step),
+                                      p2.batch_keys(step))
+
+
+def test_pipeline_host_sharding_partitions_batch():
+    store = IndexedSampleStore(StoreConfig(n_samples=256, seq_len=32))
+    full = DataPipeline(store, PipelineConfig(global_batch=8, n_hosts=1))
+    h0 = DataPipeline(store, PipelineConfig(global_batch=8, n_hosts=2,
+                                            host_id=0))
+    h1 = DataPipeline(store, PipelineConfig(global_batch=8, n_hosts=2,
+                                            host_id=1))
+    k = np.concatenate([h0.batch_keys(7), h1.batch_keys(7)])
+    np.testing.assert_array_equal(k, full.batch_keys(7))
+
+
+# ---- checkpoint --------------------------------------------------------------
+
+def _tree():
+    return {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "b": {"c": jnp.ones((5,), jnp.bfloat16),
+                  "d": jnp.int32(7)}}
+
+
+def test_checkpoint_roundtrip_bitexact(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    tree = _tree()
+    mgr.save(10, tree)
+    abstract = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(jnp.shape(x), x.dtype), tree)
+    out = mgr.restore(10, abstract)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_retention_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree())
+    assert mgr.steps() == [3, 4]
+    assert mgr.latest_step() == 4
+
+
+def test_checkpoint_async(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save_async(5, _tree())
+    mgr.wait()
+    assert mgr.latest_step() == 5
+
+
+def test_checkpoint_atomicity_no_partial_dirs(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree())
+    names = os.listdir(tmp_path)
+    assert all(n.startswith("step_") for n in names)
+
+
+def test_checkpoint_mesh_agnostic_restore(tmp_path):
+    """Save unsharded, restore under an explicit sharding (elastic path)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh()
+    mgr = CheckpointManager(str(tmp_path))
+    tree = {"w": jnp.ones((8, 4), jnp.float32)}
+    mgr.save(2, tree)
+    abstract = {"w": jax.ShapeDtypeStruct((8, 4), jnp.float32)}
+    shard = {"w": NamedSharding(mesh, P("data", "model"))}
+    out = mgr.restore(2, abstract, shard)
+    assert out["w"].sharding == shard["w"]
+
+
+# ---- fault tolerance -----------------------------------------------------------
+
+def test_straggler_monitor_flags_slow_host():
+    mon = ft.StragglerMonitor(n_hosts=8, threshold_mads=5.0, evict_after=2)
+    evicted = []
+    for step in range(4):
+        times = {h: 1.0 + 0.01 * h for h in range(8)}
+        times[3] = 9.0                       # planted straggler
+        rep = mon.record(step, times)
+        assert 3 in rep.flagged
+        evicted = rep.evict
+    assert 3 in evicted
+
+
+def test_straggler_monitor_quiet_on_uniform_times():
+    mon = ft.StragglerMonitor(n_hosts=4)
+    rep = mon.record(0, {h: 1.0 + 0.001 * h for h in range(4)})
+    assert rep.flagged == [] or rep.flagged == [3]
+
+
+def test_run_with_restarts_recovers():
+    calls = {"n": 0}
+
+    def train(start):
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise ft.InjectedFailure()
+        return start + 10
+
+    final, restarts = ft.run_with_restarts(train, lambda: 5, max_restarts=5)
+    assert final == 15 and restarts == 2
+
+
+def test_elastic_plan_single_and_multi_pod():
+    p1 = ft.ElasticPlan.plan(256, 256, tp=16)
+    assert p1.mesh_shape == (16, 16)
+    p2 = ft.ElasticPlan.plan(512, 256, tp=16)
+    assert p2.mesh_shape == (2, 16, 16)
+    assert p2.axis_names == ("pod", "data", "model")
+
+
+# ---- optimizer --------------------------------------------------------------
+
+def test_adamw_minimizes_quadratic():
+    cfg = adamw.AdamWConfig(lr_peak=0.1, warmup_steps=5, total_steps=200,
+                            weight_decay=0.0)
+    params = {"x": jnp.asarray(5.0)}
+    state = adamw.init(cfg, params)
+    for _ in range(150):
+        grads = {"x": 2 * params["x"]}
+        params, state, _ = adamw.update(cfg, grads, state, params)
+    assert abs(float(params["x"])) < 0.3
+
+
+def test_lr_schedule_shape():
+    cfg = adamw.AdamWConfig(lr_peak=1e-3, warmup_steps=10, total_steps=100)
+    lrs = [float(adamw.lr_schedule(cfg, jnp.int32(s))) for s in
+           (0, 5, 10, 50, 100)]
+    assert lrs[0] < lrs[1] < lrs[2]
+    assert lrs[2] == pytest.approx(1e-3, rel=1e-3)
+    assert lrs[4] < lrs[3] < lrs[2]
+
+
+def test_grad_clipping():
+    cfg = adamw.AdamWConfig(clip_norm=1.0, warmup_steps=0)
+    params = {"x": jnp.zeros((4,))}
+    state = adamw.init(cfg, params)
+    _, _, m = adamw.update(cfg, {"x": jnp.full((4,), 100.0)}, state, params)
+    assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_jamba_uses_bf16_mu():
+    cfg = adamw.config_for("jamba_15_large_398b")
+    assert cfg.mu_dtype == jnp.bfloat16
+    assert adamw.config_for("llama3_8b").mu_dtype == jnp.float32

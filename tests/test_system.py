@@ -1,0 +1,125 @@
+"""End-to-end system behaviour: train loop, restart recovery, loss descent."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_smoke
+from repro.data.pipeline import DataPipeline, PipelineConfig
+from repro.data.store import IndexedSampleStore, StoreConfig
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer as T
+from repro.optim import adamw
+from repro.parallel.sharding import Policy
+from repro.train import step as STEP
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _setup(arch="llama3_8b", gb=8, seq=64, steps=200):
+    cfg = get_smoke(arch)
+    mesh = make_host_mesh()
+    fn, shardings, abstracts = STEP.make_train_step(
+        cfg, Policy(), mesh, gb, adamw.AdamWConfig(
+            lr_peak=3e-3, warmup_steps=10, total_steps=steps))
+    return cfg, mesh, fn, shardings, abstracts
+
+
+def test_training_loss_decreases():
+    cfg, mesh, fn, _, _ = _setup()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw.init(adamw.AdamWConfig(lr_peak=3e-3, warmup_steps=10,
+                                       total_steps=200), params)
+    store = IndexedSampleStore(StoreConfig(n_samples=256, seq_len=64,
+                                           vocab=cfg.vocab))
+    pipe = DataPipeline(store, PipelineConfig(global_batch=8))
+    losses = []
+    with mesh:
+        for step in range(60):
+            b = pipe.get_batch(step)
+            params, opt, m = fn(params, opt,
+                                {"tokens": b["tokens"],
+                                 "labels": b["labels"]})
+            losses.append(float(m["loss"]))
+    # calibrated: d_model=64 smoke model on the Markov corpus drops ~0.08
+    # over 60 steps at this lr; require a clear, monotone-ish descent
+    assert np.mean(losses[-10:]) < np.mean(losses[:10]) - 0.04, \
+        (losses[:5], losses[-5:])
+    slope = np.polyfit(np.arange(len(losses)), losses, 1)[0]
+    assert slope < 0, f"loss trend not decreasing: slope={slope:.4f}"
+
+
+def test_restart_resumes_bitexact(tmp_path):
+    """ckpt at step k, keep training to k+n; restart from k must match."""
+    cfg, mesh, fn, _, _ = _setup()
+    opt_cfg = adamw.AdamWConfig(lr_peak=3e-3, warmup_steps=10,
+                                total_steps=200)
+    store = IndexedSampleStore(StoreConfig(n_samples=128, seq_len=64,
+                                           vocab=cfg.vocab))
+    pipe = DataPipeline(store, PipelineConfig(global_batch=8))
+    mgr = CheckpointManager(str(tmp_path))
+
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw.init(opt_cfg, params)
+    with mesh:
+        for step in range(5):
+            b = pipe.get_batch(step)
+            params, opt, m = fn(params, opt, {"tokens": b["tokens"],
+                                              "labels": b["labels"]})
+        mgr.save(5, {"params": params, "opt": opt})
+        # continue to step 8
+        for step in range(5, 8):
+            b = pipe.get_batch(step)
+            params, opt, m1 = fn(params, opt, {"tokens": b["tokens"],
+                                               "labels": b["labels"]})
+
+        # simulate crash + restart from step 5
+        abstract = {
+            "params": jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(jnp.shape(x), x.dtype),
+                params),
+            "opt": jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(jnp.shape(x), x.dtype), opt),
+        }
+        st = mgr.restore(5, abstract)
+        p2, o2 = st["params"], st["opt"]
+        for step in range(5, 8):
+            b = pipe.get_batch(step)        # deterministic data replay
+            p2, o2, m2 = fn(p2, o2, {"tokens": b["tokens"],
+                                     "labels": b["labels"]})
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), abs=1e-6)
+
+
+@pytest.mark.slow
+def test_train_driver_with_failure_injection():
+    """launch/train.py survives an injected failure and finishes."""
+    import tempfile
+    with tempfile.TemporaryDirectory() as d:
+        env = dict(os.environ, PYTHONPATH="src")
+        out = subprocess.run(
+            [sys.executable, "-m", "repro.launch.train", "--arch",
+             "llama3_8b", "--smoke", "--steps", "25", "--global-batch", "4",
+             "--seq-len", "32", "--ckpt-dir", d, "--ckpt-every", "10",
+             "--fail-at", "15", "--log-every", "10"],
+            capture_output=True, text=True, env=env, cwd=REPO, timeout=560)
+        assert "injected failure" in out.stdout, out.stdout + out.stderr
+        assert "done: 25 steps" in out.stdout, out.stdout + out.stderr
+
+
+def test_serve_step_factory_runs_on_host_mesh():
+    cfg = get_smoke("llama3_8b")
+    mesh = make_host_mesh()
+    fn, _, (p_abs, cache_abs) = STEP.make_decode_step(cfg, Policy(), mesh,
+                                                      2, 32)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    cache = T.init_cache(cfg, params, 2, 32)
+    with mesh:
+        logits, new_cache = fn(params, cache,
+                               {"tokens": jnp.zeros((2, 1), jnp.int32)})
+    assert logits.shape == (2, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
