@@ -1,0 +1,312 @@
+"""Sharded key-space skiplist — the index-larger-than-VMEM scaling path.
+
+A single fused table tops out at ``VMEM_BUDGET_BYTES`` (~12 MiB per TPU
+core, see ``kernels/ops.py``): ``levels * capacity * 2 * 4`` bytes for the
+foresight variant.  Past that the single-tile Pallas kernel cannot pin the
+index, so we partition the *key space* into ``S`` contiguous ranges — the
+locality move of the B-Skiplist (2025) and the tiering move of the
+skiplist-based LSM tree (2018) — and keep one independent ``SkipListState``
+per range, each sized so its table fits a per-grid-step VMEM tile.
+
+Layout
+------
+* ``shards``: one stacked ``SkipListState`` whose every leaf carries a
+  leading ``[S]`` axis (``fused`` becomes ``[S, L, cap, 2]``, …).  The
+  stacked form is what makes the Pallas shard-grid dimension a plain
+  BlockSpec index (``lambda j, s: (s, 0, 0, 0)``) and lets host-side ops
+  ``vmap`` over shards.
+* ``boundaries``: ``[S]`` int32, ``boundaries[s]`` = smallest key of shard
+  ``s`` (``boundaries[0]`` pinned to ``KEY_MIN``).  Shard ``s`` owns keys in
+  ``[boundaries[s], boundaries[s+1])``; this invariant is preserved by
+  routed inserts/deletes, so the flat array stays valid without rebuilds.
+
+Routing is host-free: ``jnp.searchsorted(boundaries, q, side='right') - 1``
+— one vectorized binary search over ``S`` int32s, negligible next to a
+traversal.  VMEM-budget math: for ``n`` keys over ``S`` shards each shard
+holds ``m = ceil(n / S)`` keys with capacity ``cap_s = pow2ceil(2 m + 4)``,
+so the per-shard fused tile is ``L * cap_s * 8`` bytes; the builder picks
+the smallest power-of-two ``S`` that brings that under the budget.
+
+Empty shards (possible when ``n`` is not a multiple of ``S``) hold only the
+two sentinels; their boundary degenerates to ``KEY_MAX`` so routing never
+selects them, and cross-shard range scans walk straight through them.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.skiplist import (HEAD, KEY_MAX, KEY_MIN, NULL_VAL, OP_READ,
+                                 SkipListState, apply_ops, build,
+                                 check_foresight_invariant,
+                                 effective_top_level)
+
+
+class ShardedSkipList(NamedTuple):
+    """``S`` independent key-range shards + the flat routing array."""
+
+    shards: SkipListState    # stacked pytree — every leaf has leading [S]
+    boundaries: jax.Array    # [S] int32 — inclusive lower key bound per shard
+
+    @property
+    def n_shards(self) -> int:
+        return self.boundaries.shape[0]
+
+    @property
+    def levels(self) -> int:
+        arr = self.shards.nxt if self.shards.nxt is not None else self.shards.fused
+        return arr.shape[1]
+
+    @property
+    def shard_capacity(self) -> int:
+        return self.shards.keys.shape[1]
+
+    @property
+    def foresight(self) -> bool:
+        return self.shards.fused is not None
+
+
+def route(boundaries: jax.Array, queries: jax.Array) -> jax.Array:
+    """Shard id per query: the shard whose key range contains it."""
+    sid = jnp.searchsorted(boundaries, queries.astype(jnp.int32),
+                           side="right") - 1
+    return jnp.clip(sid, 0, boundaries.shape[0] - 1).astype(jnp.int32)
+
+
+def shard_capacity_for(n: int, n_shards: int) -> int:
+    """Per-shard capacity for ``n`` total keys (2x headroom, pow2, +sentinels)."""
+    m = max(1, -(-n // n_shards))
+    return max(8, 1 << (2 * m + 4 - 1).bit_length())
+
+
+@functools.partial(jax.jit, static_argnames=("n_shards", "capacity", "levels",
+                                             "foresight"))
+def build_sharded(keys: jax.Array, vals: jax.Array, *, n_shards: int,
+                  capacity: int = 0, levels: int = 16, foresight: bool = True,
+                  seed: int = 0, valid: Optional[jax.Array] = None
+                  ) -> ShardedSkipList:
+    """Partition sorted unique int32 ``keys`` into ``n_shards`` range shards.
+
+    ``valid`` (optional prefix mask) supports callers with a dynamic live
+    count (see ``kernels.ops.shard_state``); invalid positions must be a
+    suffix and are forced to ``KEY_MAX`` padding.
+    """
+    n = keys.shape[0]
+    S = n_shards
+    if capacity == 0:
+        capacity = shard_capacity_for(n, S)
+    # keys per shard (ceil); >= 1 so an empty build still pads every shard
+    # to one invalid slot and the stride-m boundary slice stays well formed
+    m = max(1, -(-n // S))
+    assert m + 2 <= capacity, "shard capacity must exceed keys-per-shard + 2"
+
+    keys = keys.astype(jnp.int32)
+    vals = vals.astype(jnp.int32)
+    if valid is None:
+        valid = jnp.ones((n,), jnp.bool_)
+    keys = jnp.where(valid, keys, KEY_MAX)
+    pad = S * m - n
+    if pad:
+        keys = jnp.concatenate([keys, jnp.full((pad,), KEY_MAX, jnp.int32)])
+        vals = jnp.concatenate([vals, jnp.full((pad,), NULL_VAL, jnp.int32)])
+        valid = jnp.concatenate([valid, jnp.zeros((pad,), jnp.bool_)])
+
+    states = []
+    for s in range(S):
+        sk = keys[s * m:(s + 1) * m]
+        sv = vals[s * m:(s + 1) * m]
+        sm = valid[s * m:(s + 1) * m]
+        states.append(build(sk, sv, capacity=capacity, levels=levels,
+                            foresight=foresight, seed=seed + s, valid=sm))
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+
+    boundaries = keys[::m]                        # first key of each shard
+    boundaries = boundaries.at[0].set(KEY_MIN)    # shard 0 owns (-inf, b1)
+    return ShardedSkipList(shards=stacked, boundaries=boundaries)
+
+
+# ---------------------------------------------------------------------------
+# Batched search across shards (host-free routing + flat-gather traversal)
+# ---------------------------------------------------------------------------
+
+def _effective_tops(shl: ShardedSkipList) -> jax.Array:
+    """[S] — per-shard highest populated level (+1 slack)."""
+    return jax.vmap(effective_top_level)(shl.shards)
+
+
+def search_sharded(shl: ShardedSkipList, queries: jax.Array
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Batched lookup across the whole partitioned index: (found, vals).
+
+    Each lane traverses only its own shard: the stacked tables are viewed as
+    one flat array and every gather is offset by ``sid * L * cap`` — the
+    same lock-step loop as ``skiplist.search_fast``, generalized by one
+    index term.  No host round-trip anywhere.
+    """
+    q = queries.astype(jnp.int32)
+    B = q.shape[0]
+    L, cap = shl.levels, shl.shard_capacity
+    sid = route(shl.boundaries, q)
+    x = jnp.zeros((B,), jnp.int32)
+    lvl = jnp.take(_effective_tops(shl), sid)
+
+    if shl.foresight:
+        flat = shl.shards.fused.reshape((-1, 2))
+        def gather(lv, xx):
+            rec = jnp.take(flat, (sid * L + lv) * cap + xx, axis=0)
+            return rec[..., 0], rec[..., 1]
+    else:
+        flat_nxt = shl.shards.nxt.reshape(-1)
+        flat_keys = shl.shards.keys.reshape(-1)
+        def gather(lv, xx):
+            ptr = jnp.take(flat_nxt, (sid * L + lv) * cap + xx, axis=0)
+            return ptr, jnp.take(flat_keys, sid * cap + ptr, axis=0)
+
+    def cond(carry):
+        return jnp.any(carry[1] >= 0)
+
+    def body(carry):
+        x, lvl = carry
+        active = lvl >= 0
+        ptr, fk = gather(jnp.maximum(lvl, 0), x)
+        go = active & (fk < q)
+        return jnp.where(go, ptr, x), jnp.where(go | ~active, lvl, lvl - 1)
+
+    x, lvl = lax.while_loop(cond, body, (x, lvl))
+    cand, ck = gather(jnp.zeros((B,), jnp.int32), x)
+    found = ck == q
+    flat_vals = shl.shards.vals.reshape(-1)
+    vals = jnp.where(found, jnp.take(flat_vals, sid * cap + cand), NULL_VAL)
+    return found, vals
+
+
+def contains_sharded(shl: ShardedSkipList, queries: jax.Array) -> jax.Array:
+    return search_sharded(shl, queries)[0]
+
+
+# ---------------------------------------------------------------------------
+# Cross-shard range scan: route lo, walk level 0, spill into successors
+# ---------------------------------------------------------------------------
+
+def range_scan_sharded(shl: ShardedSkipList, lo: jax.Array, hi: jax.Array,
+                       max_out: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Collect up to ``max_out`` (key, val) pairs with lo <= key < hi.
+
+    Routes ``lo`` to its owning shard, positions via that shard's
+    predecessor search, then walks level 0.  Hitting a shard's tail
+    (foreseen key == KEY_MAX) *spills* into the successor shard's head —
+    range boundaries are invisible to the caller.  Runs ``max_out + S``
+    iterations: each spill consumes one non-emitting step.
+    """
+    from repro.core import skiplist as sl
+
+    lo = lo.astype(jnp.int32)
+    hi = hi.astype(jnp.int32)
+    S = shl.n_shards
+    L, cap = shl.levels, shl.shard_capacity
+    s0 = route(shl.boundaries, lo[None])[0]
+    shard0 = jax.tree.map(lambda a: a[s0], shl.shards)
+    x = sl.search(shard0, lo[None]).preds[0, 0]   # level-0 predecessor of lo
+
+    if shl.foresight:
+        flat = shl.shards.fused.reshape((-1, 2))
+        def gather0(sid, xx):
+            rec = flat[(sid * L + 0) * cap + xx]
+            return rec[0], rec[1]
+    else:
+        flat_nxt = shl.shards.nxt.reshape(-1)
+        flat_keys = shl.shards.keys.reshape(-1)
+        def gather0(sid, xx):
+            ptr = flat_nxt[(sid * L + 0) * cap + xx]
+            return ptr, flat_keys[sid * cap + ptr]
+
+    keys_out = jnp.full((max_out,), KEY_MAX, jnp.int32)
+    vals_out = jnp.full((max_out,), NULL_VAL, jnp.int32)
+    flat_vals = shl.shards.vals.reshape(-1)
+
+    def body(_, carry):
+        sid, x, keys_out, vals_out, count = carry
+        ptr, k = gather0(sid, x)
+        at_end = k == KEY_MAX                     # shard exhausted (or empty)
+        spill = at_end & (sid < S - 1)
+        take = ~at_end & (k >= lo) & (k < hi) & (count < max_out)
+        slot = jnp.minimum(count, max_out - 1)
+        keys_out = keys_out.at[slot].set(jnp.where(take, k, keys_out[slot]))
+        vals_out = vals_out.at[slot].set(
+            jnp.where(take, flat_vals[sid * cap + ptr], vals_out[slot]))
+        count = count + jnp.where(take, 1, 0).astype(jnp.int32)
+        new_sid = jnp.where(spill, sid + 1, sid)
+        new_x = jnp.where(spill, jnp.int32(HEAD),
+                          jnp.where(take, ptr, x))  # stop advancing past hi
+        return new_sid, new_x, keys_out, vals_out, count
+
+    _, _, keys_out, vals_out, count = lax.fori_loop(
+        0, max_out + S, body,
+        (s0, x, keys_out, vals_out, jnp.int32(0)))
+    return keys_out, vals_out, count
+
+
+# ---------------------------------------------------------------------------
+# Routed batched updates (the functional concurrency model, per shard)
+# ---------------------------------------------------------------------------
+
+def apply_ops_sharded(shl: ShardedSkipList, op_types: jax.Array,
+                      keys: jax.Array, vals: jax.Array
+                      ) -> Tuple[ShardedSkipList, jax.Array]:
+    """Apply a linearized mixed-op batch, routed per shard.
+
+    Every shard scans the full batch under ``vmap``, with ops owned by other
+    shards masked to no-op reads — the linearization order is identical to
+    the monolithic ``apply_ops``.  Result lane ``b`` is taken from the shard
+    that owns key ``b``.  Inserts/deletes stay inside the routed shard's key
+    range, so ``boundaries`` remains valid without maintenance.
+
+    Capacity caveat: each shard has a FIXED capacity, so a key-skewed insert
+    stream can exhaust one shard while others have room — those inserts
+    return 0 (the same signalled-failure contract as monolithic capacity
+    exhaustion, but reached earlier under skew).  Check the result flags;
+    shard split/rebalance is a ROADMAP item.
+    """
+    S = shl.n_shards
+    op_types = op_types.astype(jnp.int32)
+    keys = keys.astype(jnp.int32)
+    vals = vals.astype(jnp.int32)
+    B = keys.shape[0]
+    sid = route(shl.boundaries, keys)
+    ops_m = jnp.where(sid[None, :] == jnp.arange(S)[:, None],
+                      op_types[None, :], OP_READ)
+    keys_m = jnp.broadcast_to(keys[None, :], (S, B))
+    vals_m = jnp.broadcast_to(vals[None, :], (S, B))
+    new_shards, res_m = jax.vmap(apply_ops)(shl.shards, ops_m, keys_m, vals_m)
+    results = res_m[sid, jnp.arange(B)]
+    return shl._replace(shards=new_shards), results
+
+
+# ---------------------------------------------------------------------------
+# Invariants / introspection
+# ---------------------------------------------------------------------------
+
+def check_sharded_invariant(shl: ShardedSkipList) -> jax.Array:
+    """Foresight invariant on every shard + boundary containment."""
+    ok = jnp.bool_(True)
+    if shl.foresight:
+        ok = jnp.all(jax.vmap(check_foresight_invariant)(shl.shards))
+    # every live key sits inside its shard's [boundaries[s], boundaries[s+1])
+    S = shl.n_shards
+    cap = shl.shard_capacity
+    keys = shl.shards.keys                                  # [S, cap]
+    live = (keys != KEY_MAX) & (keys != KEY_MIN)
+    lo_b = shl.boundaries[:, None]
+    hi_b = jnp.concatenate([shl.boundaries[1:],
+                            jnp.full((1,), KEY_MAX, jnp.int32)])[:, None]
+    # degenerate (empty-shard) boundaries hold KEY_MAX; live keys never do
+    in_range = jnp.where(live, (keys >= lo_b) & (keys < hi_b), True)
+    return ok & jnp.all(in_range)
+
+
+def total_n(shl: ShardedSkipList) -> jax.Array:
+    return jnp.sum(shl.shards.n)

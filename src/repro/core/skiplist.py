@@ -112,7 +112,6 @@ def _count_trailing_zeros(x: jax.Array) -> jax.Array:
     """ctz for uint32 (32 for x == 0)."""
     lsb = x & (~x + jnp.uint32(1))
     safe = jnp.where(lsb == 0, jnp.uint32(1), lsb)
-    expo = (safe.view(jnp.float32) if False else None)
     # Portable integer log2 of a power of two via float conversion.
     f = safe.astype(jnp.float64) if jax.config.read("jax_enable_x64") else safe.astype(jnp.float32)
     ctz = jnp.log2(f).astype(jnp.int32)
@@ -122,19 +121,29 @@ def _count_trailing_zeros(x: jax.Array) -> jax.Array:
 @functools.partial(jax.jit, static_argnames=("capacity", "levels", "foresight"))
 def build(keys: jax.Array, vals: jax.Array, *, capacity: int,
           levels: int = 20, foresight: bool = True,
-          seed: int = 0) -> SkipListState:
+          seed: int = 0, valid: Optional[jax.Array] = None) -> SkipListState:
     """Bulk-build from sorted, unique int32 keys (vectorized; no python loop).
 
     Elements get node ids ``2 .. n+1`` in key order.  For every level ``l``,
     the nodes whose tower reaches ``l`` form the linked list at that level;
     the successor of position ``i`` is the next position ``j > i`` whose
     tower also reaches ``l`` (computed with a reversed cumulative-min).
+
+    ``valid`` (optional, [n] bool) marks real entries; invalid positions must
+    form a suffix and are built as height-0, never-linked padding.  This lets
+    a caller with a dynamic element count (e.g. the sharded builder, which
+    pads every shard to a common static length) reuse the static-shape build.
     """
     n = keys.shape[0]
     assert n + 2 <= capacity, "capacity must exceed n + 2 sentinels"
     st = empty(capacity, levels, foresight=foresight, seed=seed)
     rng, sub = jax.random.split(st.rng)
     heights = sample_heights(sub, (n,), levels)
+    if valid is None:
+        valid = jnp.ones((n,), jnp.bool_)
+    heights = jnp.where(valid, heights, 0)       # padding: no tower, no links
+    keys = jnp.where(valid, keys.astype(jnp.int32), KEY_MAX)
+    vals = jnp.where(valid, vals.astype(jnp.int32), NULL_VAL)
 
     ids = jnp.arange(2, n + 2, dtype=jnp.int32)          # node id per position
     new_keys = st.keys.at[ids].set(keys.astype(jnp.int32))
@@ -178,8 +187,11 @@ def build(keys: jax.Array, vals: jax.Array, *, capacity: int,
         nxt = nxt.at[:, HEAD].set(head_id)
         fused = None
 
+    # Padded (invalid) slots keep their bump-allocated ids but stay unlinked;
+    # bump therefore still advances past them (capacity is sized with slack).
     return st._replace(keys=new_keys, vals=new_vals, height=new_height,
-                       nxt=nxt, fused=fused, n=jnp.int32(n),
+                       nxt=nxt, fused=fused,
+                       n=jnp.sum(valid).astype(jnp.int32),
                        bump=jnp.int32(n + 2), rng=rng)
 
 
@@ -559,13 +571,6 @@ def range_scan(state: SkipListState, lo: jax.Array, hi: jax.Array,
     """
     lo = lo.astype(jnp.int32)
     hi = hi.astype(jnp.int32)
-    found, _ = (None, None)
-    if state.foresight:
-        res = search_fast(state, lo[None])
-    else:
-        res = search_fast(state, lo[None])
-    # search_fast gives found/val; we need the predecessor: re-derive the
-    # entry node via a dedicated positioning pass (cheap single query).
     r = search(state, lo[None])
     x = r.preds[0, 0]                         # level-0 predecessor of lo
 

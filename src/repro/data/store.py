@@ -8,16 +8,27 @@ traversal — and can range-scan for shard assignment.  The index variant
 (base / foresight / foresight+kernel) is selectable so the macro benchmarks
 can compare them end-to-end, mirroring the paper's DBx1000 experiment where
 Fraser's skiplist indexes table rows.
+
+When the index outgrows one VMEM tile, the store partitions the key space
+into ``n_shards`` contiguous range shards (``core.sharded``): ``n_shards=0``
+auto-selects — monolithic unless the kernel path is in use AND the table
+exceeds ``VMEM_BUDGET_BYTES`` (the budget only binds kernels), in which
+case the smallest power-of-two shard count whose per-shard tile fits.
+All lookups, scans, and updates route host-free through the flat boundary
+array; callers never see the partitioning — with one caveat: shard capacity
+is fixed, so a key-skewed ingest stream can fill one shard early (those
+inserts report 0 in the result flags; see ``sharded.apply_ops_sharded``).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import sharded as shd
 from repro.core import skiplist as sl
 from repro.kernels import ops as kops
 
@@ -30,11 +41,14 @@ class StoreConfig:
     index_levels: int = 16
     foresight: bool = True
     use_kernel: bool = False
+    n_shards: int = 0        # 0 = auto (shard only past the VMEM budget)
     seed: int = 0
 
 
 class IndexedSampleStore:
     """rows: [N, seq_len+1] tokens; index: key -> row (Foresight skiplist)."""
+
+    index: Union[sl.SkipListState, shd.ShardedSkipList]
 
     def __init__(self, cfg: StoreConfig, rows: Optional[np.ndarray] = None,
                  keys: Optional[np.ndarray] = None):
@@ -48,19 +62,43 @@ class IndexedSampleStore:
         self.rows = jnp.asarray(rows, jnp.int32)
         self.keys_np = keys.astype(np.int64)
         cap = int(2 ** np.ceil(np.log2(cfg.n_samples * 2 + 4)))
-        self.index = sl.build(
-            jnp.asarray(keys, jnp.int32),
-            jnp.arange(cfg.n_samples, dtype=jnp.int32),   # value = row id
-            capacity=cap, levels=cfg.index_levels,
-            foresight=cfg.foresight, seed=cfg.seed)
+        self.n_shards = cfg.n_shards
+        if self.n_shards == 0:
+            # The VMEM budget only binds the kernel path; the pure-JAX path
+            # has no tile constraint, so auto keeps it monolithic (sharding
+            # there would just cost S-times apply_ops work for nothing).
+            mono_tile = kops.shard_vmem_footprint(cfg.index_levels, cap,
+                                                  cfg.foresight)
+            needs_shards = cfg.use_kernel and \
+                mono_tile > kops.VMEM_BUDGET_BYTES
+            self.n_shards = kops.auto_shards(
+                cfg.n_samples, cfg.index_levels,
+                cfg.foresight) if needs_shards else 1
+        row_ids = jnp.arange(cfg.n_samples, dtype=jnp.int32)  # value = row id
+        if self.n_shards > 1:
+            self.index = shd.build_sharded(
+                jnp.asarray(keys, jnp.int32), row_ids,
+                n_shards=self.n_shards, levels=cfg.index_levels,
+                foresight=cfg.foresight, seed=cfg.seed)
+        else:
+            self.index = sl.build(
+                jnp.asarray(keys, jnp.int32), row_ids,
+                capacity=cap, levels=cfg.index_levels,
+                foresight=cfg.foresight, seed=cfg.seed)
+
+    @property
+    def sharded(self) -> bool:
+        return isinstance(self.index, shd.ShardedSkipList)
 
     # -- lookups ------------------------------------------------------------
 
     def lookup(self, keys: jax.Array) -> Tuple[jax.Array, jax.Array]:
         """Batched key lookup -> (found [B], row_ids [B])."""
         if self.cfg.use_kernel:
-            r = kops.search_kernel(self.index, keys)
+            r = kops.search_kernel(self.index, keys)   # auto-dispatches
             return r.found, r.vals
+        if self.sharded:
+            return shd.search_sharded(self.index, keys)
         return sl.search_fast(self.index, keys)   # preds-free read path
 
     def get_batch(self, keys: jax.Array) -> Tuple[jax.Array, jax.Array]:
@@ -69,19 +107,34 @@ class IndexedSampleStore:
         safe = jnp.where(found, row_ids, 0)
         return self.rows[safe], found
 
+    def range_scan(self, lo, hi, max_out: int
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        """Ordered (key, row_id) scan of [lo, hi); crosses shard boundaries."""
+        lo = jnp.asarray(lo, jnp.int32)
+        hi = jnp.asarray(hi, jnp.int32)
+        if self.sharded:
+            return shd.range_scan_sharded(self.index, lo, hi, max_out)
+        return sl.range_scan(self.index, lo, hi, max_out)
+
     # -- updates (streaming ingestion) ---------------------------------------
+
+    def _apply(self, ops: jax.Array, keys: jax.Array, vals: jax.Array
+               ) -> jax.Array:
+        if self.sharded:
+            self.index, results = shd.apply_ops_sharded(self.index, ops,
+                                                        keys, vals)
+        else:
+            self.index, results = sl.apply_ops(self.index, ops, keys, vals)
+        return results
 
     def ingest(self, keys: jax.Array, row_ids: jax.Array) -> jax.Array:
         """Insert new key->row mappings (linearized batch)."""
         ops = jnp.full(keys.shape, sl.OP_INSERT, jnp.int32)
-        self.index, results = sl.apply_ops(self.index, ops, keys, row_ids)
-        return results
+        return self._apply(ops, keys, row_ids)
 
     def evict(self, keys: jax.Array) -> jax.Array:
         ops = jnp.full(keys.shape, sl.OP_DELETE, jnp.int32)
-        self.index, results = sl.apply_ops(self.index, ops, keys,
-                                           jnp.zeros_like(keys))
-        return results
+        return self._apply(ops, keys, jnp.zeros_like(keys))
 
 
 def _markov_corpus(rng: np.random.Generator, n: int, width: int,

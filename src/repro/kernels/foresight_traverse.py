@@ -34,34 +34,70 @@ from jax.experimental import pallas as pl
 
 
 # ---------------------------------------------------------------------------
+# Shared lock-step traversal loop (all four kernels; they differ only in the
+# gather strategy — ONE fused gather vs TWO chained — and the lane mask)
+# ---------------------------------------------------------------------------
+
+def _traverse_loop(q, lanes, gather, *, levels: int, max_steps: int):
+    """Run the level-synchronous loop; returns the final predecessors [QBLK].
+
+    ``gather(lvl, x) -> (ptr, foreseen_key)`` embodies the base-vs-foresight
+    distinction; ``lanes`` masks out query lanes owned by another shard tile
+    (all-true for the monolithic kernels).
+    """
+    x = jnp.zeros_like(q)
+    lvl = jnp.full_like(q, levels - 1)
+
+    def body(_, carry):
+        x, lvl = carry
+        active = lanes & (lvl >= 0)
+        ptr, fk = gather(jnp.maximum(lvl, 0), x)
+        go = active & (fk < q)
+        x = jnp.where(go, ptr, x)
+        lvl = jnp.where(go | ~active, lvl, lvl - 1)
+        return x, lvl
+
+    x, _ = lax.fori_loop(0, max_steps, body, (x, lvl))
+    return x
+
+
+def _fused_gather(fused_tile, cap: int):
+    """ONE VMEM gather per step: the (ptr, key) record, pair-atomic by layout."""
+    flat_ptr = fused_tile[..., 0].reshape(-1)
+    flat_key = fused_tile[..., 1].reshape(-1)
+
+    def gather(lvl, x):
+        idx = lvl * cap + x
+        return (jnp.take(flat_ptr, idx, axis=0),     # ┐ one fused VMEM gather
+                jnp.take(flat_key, idx, axis=0))     # ┘ (same record, 2 lanes)
+    return gather
+
+
+def _base_gather(nxt_tile, keys_tile, cap: int):
+    """TWO chained gathers per step: pointer, then pointee key — DEPENDENT."""
+    nxt = nxt_tile.reshape(-1)                       # [L*cap]
+    keys = keys_tile.reshape(-1)                     # [cap]
+
+    def gather(lvl, x):
+        ptr = jnp.take(nxt, lvl * cap + x, axis=0)   # gather 1
+        return ptr, jnp.take(keys, ptr, axis=0)      # gather 2 — DEPENDENT
+    return gather
+
+
+# ---------------------------------------------------------------------------
 # Foresight kernel: ONE dependent gather per lock-step iteration
 # ---------------------------------------------------------------------------
 
 def _foresight_kernel(q_ref, fused_ref, node_ref, key_ref, *,
                       levels: int, cap: int, max_steps: int):
     q = q_ref[...]                                   # [QBLK] int32
-    tbl = fused_ref[...]                             # [L, cap, 2] in VMEM
-    flat_ptr = tbl[..., 0].reshape(-1)
-    flat_key = tbl[..., 1].reshape(-1)
-
-    x = jnp.zeros_like(q)
-    lvl = jnp.full_like(q, levels - 1)
-
-    def body(_, carry):
-        x, lvl = carry
-        active = lvl >= 0
-        idx = jnp.maximum(lvl, 0) * cap + x
-        ptr = jnp.take(flat_ptr, idx, axis=0)        # ┐ one fused VMEM gather
-        fk = jnp.take(flat_key, idx, axis=0)         # ┘ (same record, 2 lanes)
-        go = active & (fk < q)
-        x = jnp.where(go, ptr, x)
-        lvl = jnp.where(go | ~active, lvl, lvl - 1)
-        return x, lvl
-
-    x, lvl = lax.fori_loop(0, max_steps, body, (x, lvl))
+    gather = _fused_gather(fused_ref[...], cap)      # [L, cap, 2] in VMEM
+    x = _traverse_loop(q, jnp.ones_like(q, jnp.bool_), gather,
+                       levels=levels, max_steps=max_steps)
     # Level-0 successor of the final predecessor = the candidate.
-    node_ref[...] = jnp.take(flat_ptr, x, axis=0)
-    key_ref[...] = jnp.take(flat_key, x, axis=0)
+    node, key = gather(jnp.zeros_like(q), x)
+    node_ref[...] = node
+    key_ref[...] = key
 
 
 # ---------------------------------------------------------------------------
@@ -71,27 +107,12 @@ def _foresight_kernel(q_ref, fused_ref, node_ref, key_ref, *,
 def _base_kernel(q_ref, nxt_ref, keys_ref, node_ref, key_ref, *,
                  levels: int, cap: int, max_steps: int):
     q = q_ref[...]
-    nxt = nxt_ref[...].reshape(-1)                   # [L*cap]
-    keys = keys_ref[...]                             # [cap]
-
-    x = jnp.zeros_like(q)
-    lvl = jnp.full_like(q, levels - 1)
-
-    def body(_, carry):
-        x, lvl = carry
-        active = lvl >= 0
-        idx = jnp.maximum(lvl, 0) * cap + x
-        ptr = jnp.take(nxt, idx, axis=0)             # gather 1
-        fk = jnp.take(keys, ptr, axis=0)             # gather 2 — DEPENDENT
-        go = active & (fk < q)
-        x = jnp.where(go, ptr, x)
-        lvl = jnp.where(go | ~active, lvl, lvl - 1)
-        return x, lvl
-
-    x, lvl = lax.fori_loop(0, max_steps, body, (x, lvl))
-    ptr = jnp.take(nxt, x, axis=0)
-    node_ref[...] = ptr
-    key_ref[...] = jnp.take(keys, ptr, axis=0)
+    gather = _base_gather(nxt_ref[...], keys_ref[...], cap)
+    x = _traverse_loop(q, jnp.ones_like(q, jnp.bool_), gather,
+                       levels=levels, max_steps=max_steps)
+    node, key = gather(jnp.zeros_like(q), x)
+    node_ref[...] = node
+    key_ref[...] = key
 
 
 # ---------------------------------------------------------------------------
@@ -133,6 +154,136 @@ def foresight_traverse(fused: jax.Array, queries: jax.Array, *,
         ],
         interpret=interpret,
     )(queries.astype(jnp.int32), fused)
+    return node, key
+
+
+# ---------------------------------------------------------------------------
+# Sharded kernels: grid (B // QBLK, S) — the key space streams tile by tile
+# ---------------------------------------------------------------------------
+#
+# One pallas_call serves the whole partitioned index.  The shard axis is the
+# MINOR grid dimension, so for a fixed query block the S shard tiles are
+# visited consecutively and the output block stays resident in VMEM across
+# them (the standard revisited-block accumulation pattern): we initialize at
+# s == 0 and each shard masks in the lanes it owns (sid == s).  BlockSpec
+# ``lambda j, s: (s, 0, 0, 0)`` pins exactly one per-shard table tile —
+# sized under VMEM_BUDGET_BYTES by the builder — per grid step, which is
+# precisely the sharded key-space path the module docstring promises.
+# Shard tiles with no routed lanes skip the traversal loop via pl.when.
+
+def _foresight_sharded_kernel(q_ref, sid_ref, fused_ref, node_ref, key_ref, *,
+                              levels: int, cap: int, max_steps: int):
+    s = pl.program_id(1)
+    q = q_ref[...]                                   # [QBLK] int32
+    mine = sid_ref[...] == s                         # lanes routed to tile s
+
+    @pl.when(s == 0)
+    def _init():
+        node_ref[...] = jnp.zeros_like(q)
+        key_ref[...] = jnp.zeros_like(q)
+
+    @pl.when(jnp.any(mine))
+    def _traverse():
+        gather = _fused_gather(fused_ref[...], cap)  # [1, L, cap, 2] tile
+        x = _traverse_loop(q, mine, gather, levels=levels,
+                           max_steps=max_steps)
+        node, key = gather(jnp.zeros_like(q), x)
+        node_ref[...] = jnp.where(mine, node, node_ref[...])
+        key_ref[...] = jnp.where(mine, key, key_ref[...])
+
+
+def _base_sharded_kernel(q_ref, sid_ref, nxt_ref, keys_ref, node_ref,
+                         key_ref, *, levels: int, cap: int, max_steps: int):
+    s = pl.program_id(1)
+    q = q_ref[...]
+    mine = sid_ref[...] == s
+
+    @pl.when(s == 0)
+    def _init():
+        node_ref[...] = jnp.zeros_like(q)
+        key_ref[...] = jnp.zeros_like(q)
+
+    @pl.when(jnp.any(mine))
+    def _traverse():
+        gather = _base_gather(nxt_ref[...], keys_ref[...], cap)
+        x = _traverse_loop(q, mine, gather, levels=levels,
+                           max_steps=max_steps)
+        node, key = gather(jnp.zeros_like(q), x)
+        node_ref[...] = jnp.where(mine, node, node_ref[...])
+        key_ref[...] = jnp.where(mine, key, key_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("max_steps", "interpret"))
+def foresight_traverse_sharded(fused: jax.Array, shard_ids: jax.Array,
+                               queries: jax.Array, *, max_steps: int = 0,
+                               interpret: bool = True):
+    """Sharded foresight search over stacked tables ``fused [S, L, cap, 2]``.
+
+    ``shard_ids [B]`` routes each (padded) query lane to its key-range shard
+    (see ``core.sharded.route``).  Returns (node[B], cand_key[B]) with node
+    ids local to the owning shard.
+    """
+    S, L, cap, _ = fused.shape
+    B = queries.shape[0]
+    assert B % QBLK == 0, "pad queries to a multiple of QBLK"
+    if max_steps == 0:
+        max_steps = 4 * L + 16
+    grid = (B // QBLK, S)
+    kernel = functools.partial(_foresight_sharded_kernel, levels=L, cap=cap,
+                               max_steps=max_steps)
+    node, key = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((QBLK,), lambda j, s: (j,)),        # queries → VMEM
+            pl.BlockSpec((QBLK,), lambda j, s: (j,)),        # shard ids
+            pl.BlockSpec((1, L, cap, 2), lambda j, s: (s, 0, 0, 0)),  # tile s
+        ],
+        out_specs=[
+            pl.BlockSpec((QBLK,), lambda j, s: (j,)),
+            pl.BlockSpec((QBLK,), lambda j, s: (j,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(queries.astype(jnp.int32), shard_ids.astype(jnp.int32), fused)
+    return node, key
+
+
+@functools.partial(jax.jit, static_argnames=("max_steps", "interpret"))
+def base_traverse_sharded(nxt: jax.Array, keys: jax.Array,
+                          shard_ids: jax.Array, queries: jax.Array, *,
+                          max_steps: int = 0, interpret: bool = True):
+    """Sharded base search over ``nxt [S, L, cap]`` / ``keys [S, cap]``."""
+    S, L, cap = nxt.shape
+    B = queries.shape[0]
+    assert B % QBLK == 0, "pad queries to a multiple of QBLK"
+    if max_steps == 0:
+        max_steps = 4 * L + 16
+    grid = (B // QBLK, S)
+    kernel = functools.partial(_base_sharded_kernel, levels=L, cap=cap,
+                               max_steps=max_steps)
+    node, key = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((QBLK,), lambda j, s: (j,)),
+            pl.BlockSpec((QBLK,), lambda j, s: (j,)),
+            pl.BlockSpec((1, L, cap), lambda j, s: (s, 0, 0)),
+            pl.BlockSpec((1, cap), lambda j, s: (s, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((QBLK,), lambda j, s: (j,)),
+            pl.BlockSpec((QBLK,), lambda j, s: (j,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(queries.astype(jnp.int32), shard_ids.astype(jnp.int32), nxt, keys)
     return node, key
 
 

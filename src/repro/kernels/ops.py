@@ -3,27 +3,52 @@
 Adds the ergonomics the raw kernels don't have: query padding to the lane
 block, found/value resolution, float-key encoding, and a VMEM-budget check
 that decides between the single-tile kernel and the sharded-key-space path.
+
+VMEM-budget math
+----------------
+A TPU core has ~16 MiB of VMEM; we budget ``VMEM_BUDGET_BYTES`` (12 MiB)
+for the index tile, leaving headroom for query/output blocks and compiler
+temporaries.  The single-tile kernels pin the whole table per grid step:
+
+* foresight: ``levels * capacity * 2 * 4`` bytes (fused (ptr, key) pairs),
+* base:      ``levels * capacity * 4 + capacity * 4`` bytes (nxt + keys),
+
+so e.g. ``levels=16, capacity=2**18`` fused is 32 MiB — past the budget.
+``search_kernel`` then transparently switches to the sharded path: the key
+space is partitioned into ``S`` contiguous range shards (smallest power of
+two whose per-shard tile fits, see ``auto_shards``), queries are routed
+host-free via ``jnp.searchsorted`` on the shard boundaries, and one
+``pallas_call`` with grid ``(B // QBLK, S)`` streams the per-shard tiles
+through VMEM (``core.sharded`` holds the data structure, the sharded
+kernels live in ``foresight_traverse.py``).
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import sharded as shd
 from repro.core.skiplist import NULL_VAL, SkipListState
+from repro.core.sharded import ShardedSkipList
 from repro.kernels.foresight_traverse import (QBLK, base_traverse,
-                                              foresight_traverse)
+                                              base_traverse_sharded,
+                                              foresight_traverse,
+                                              foresight_traverse_sharded)
 from repro.kernels.ref import encode_float_keys
 
 VMEM_BUDGET_BYTES = 12 * 1024 * 1024   # leave headroom of the 16 MiB/core
+
+MAX_SHARDS = 1024
 
 
 class KernelSearchResult(NamedTuple):
     found: jax.Array   # [B] bool
     vals: jax.Array    # [B] int32
-    node: jax.Array    # [B] int32
+    node: jax.Array    # [B] int32 — shard-local id composed as sid*cap + node
+                       #             on the sharded path (shard-global)
 
 
 def _pad(q: jax.Array) -> Tuple[jax.Array, int]:
@@ -34,21 +59,103 @@ def _pad(q: jax.Array) -> Tuple[jax.Array, int]:
     return q, B
 
 
-def vmem_footprint(state: SkipListState) -> int:
-    """Bytes the index tile occupies in VMEM."""
-    if state.foresight:
-        return state.fused.size * 4
-    return state.nxt.size * 4 + state.keys.size * 4
+def vmem_footprint(state: Union[SkipListState, ShardedSkipList]) -> int:
+    """Bytes the (per-shard) index tile occupies in VMEM."""
+    if isinstance(state, ShardedSkipList):
+        return shard_vmem_footprint(state.levels, state.shard_capacity,
+                                    state.foresight)
+    return shard_vmem_footprint(state.levels, state.capacity,
+                                state.foresight)
 
 
-def fits_vmem(state: SkipListState) -> bool:
+def fits_vmem(state: Union[SkipListState, ShardedSkipList]) -> bool:
     return vmem_footprint(state) <= VMEM_BUDGET_BYTES
 
 
-def search_kernel(state: SkipListState, queries: jax.Array, *,
-                  max_steps: int = 0, interpret: bool = True
-                  ) -> KernelSearchResult:
-    """Kernel-backed batched search on either variant; resolves found/vals."""
+def shard_vmem_footprint(levels: int, capacity: int, foresight: bool) -> int:
+    if foresight:
+        return levels * capacity * 2 * 4
+    return levels * capacity * 4 + capacity * 4
+
+
+def auto_shards(n: int, levels: int, foresight: bool = True) -> int:
+    """Smallest power-of-two shard count whose per-shard tile fits VMEM."""
+    s = 1
+    while s <= MAX_SHARDS:
+        cap = shd.shard_capacity_for(n, s)
+        if shard_vmem_footprint(levels, cap, foresight) <= VMEM_BUDGET_BYTES:
+            return s
+        s *= 2
+    raise ValueError(f"index with n={n}, levels={levels} cannot be sharded "
+                     f"into <= {MAX_SHARDS} VMEM-sized tiles")
+
+
+@functools.partial(jax.jit, static_argnames=("n_shards",))
+def shard_state(state: SkipListState, n_shards: int) -> ShardedSkipList:
+    """Convert a monolithic skiplist into ``n_shards`` key-range shards.
+
+    Live keys are recovered in sorted order from the SoA key array (unused
+    and deleted slots hold KEY_MAX, the head KEY_MIN, so one argsort + a
+    prefix mask of length ``state.n`` suffices) and re-bulk-built.  Node ids
+    are NOT preserved — found/vals are; callers that key on node ids must
+    stay on the single-tile path.  This is a full rebuild: callers serving
+    a big index repeatedly should build a ``ShardedSkipList`` once (e.g.
+    ``IndexedSampleStore(n_shards=...)``) instead of converting per call.
+    """
+    cap = state.capacity
+    m_total = cap - 2                              # static live-count bound
+    order = jnp.argsort(state.keys)                # [cap]; head first
+    keys_sorted = state.keys[order][1:m_total + 1]
+    vals_sorted = state.vals[order][1:m_total + 1]
+    valid = jnp.arange(m_total) < state.n
+    return shd.build_sharded(keys_sorted, vals_sorted, n_shards=n_shards,
+                             levels=state.levels,
+                             foresight=state.foresight, valid=valid)
+
+
+def search_kernel_sharded(shl: ShardedSkipList, queries: jax.Array, *,
+                          max_steps: int = 0, interpret: bool = True
+                          ) -> KernelSearchResult:
+    """Kernel-backed search over a partitioned index (grid (B//QBLK, S))."""
+    q, B = _pad(queries.astype(jnp.int32))
+    sid = shd.route(shl.boundaries, q)
+    if shl.foresight:
+        node, ckey = foresight_traverse_sharded(
+            shl.shards.fused, sid, q, max_steps=max_steps,
+            interpret=interpret)
+    else:
+        node, ckey = base_traverse_sharded(
+            shl.shards.nxt, shl.shards.keys, sid, q, max_steps=max_steps,
+            interpret=interpret)
+    node, ckey, sid = node[:B], ckey[:B], sid[:B]
+    found = ckey == queries.astype(jnp.int32)
+    cap = shl.shard_capacity
+    flat_vals = shl.shards.vals.reshape(-1)
+    gnode = sid * cap + node
+    vals = jnp.where(found, jnp.take(flat_vals, gnode), NULL_VAL)
+    return KernelSearchResult(found, vals, gnode)
+
+
+def search_kernel(state: Union[SkipListState, ShardedSkipList],
+                  queries: jax.Array, *, max_steps: int = 0,
+                  interpret: bool = True) -> KernelSearchResult:
+    """Kernel-backed batched search on either variant; resolves found/vals.
+
+    Auto-dispatch: a ``ShardedSkipList`` (or a monolithic state whose table
+    exceeds the VMEM budget) takes the sharded key-space path; small
+    monolithic states take the single-tile kernel.  The oversized-monolith
+    branch rebuilds shards on every call (see ``shard_state``) — correct,
+    but callers on a hot path should pre-shard.
+    """
+    if isinstance(state, ShardedSkipList):
+        return search_kernel_sharded(state, queries, max_steps=max_steps,
+                                     interpret=interpret)
+    if not fits_vmem(state):
+        n = state.capacity - 2                     # static upper bound on n
+        shl = shard_state(state, auto_shards(n, state.levels,
+                                             state.foresight))
+        return search_kernel_sharded(shl, queries, max_steps=max_steps,
+                                     interpret=interpret)
     q, B = _pad(queries.astype(jnp.int32))
     if state.foresight:
         node, ckey = foresight_traverse(state.fused, q, max_steps=max_steps,
@@ -62,9 +169,9 @@ def search_kernel(state: SkipListState, queries: jax.Array, *,
     return KernelSearchResult(found, vals, node)
 
 
-def search_kernel_float(state: SkipListState, float_queries: jax.Array, *,
-                        max_steps: int = 0, interpret: bool = True
-                        ) -> KernelSearchResult:
+def search_kernel_float(state: Union[SkipListState, ShardedSkipList],
+                        float_queries: jax.Array, *, max_steps: int = 0,
+                        interpret: bool = True) -> KernelSearchResult:
     """Float-keyed search (keys must have been encoded at build time)."""
     return search_kernel(state, encode_float_keys(float_queries),
                          max_steps=max_steps, interpret=interpret)

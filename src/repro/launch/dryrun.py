@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import SHAPES, get_config
+from repro.launch.costs import cost_dict
 from repro.launch.mesh import make_production_mesh
 from repro.optim import adamw
 from repro.parallel.sharding import policy_for
@@ -145,7 +146,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             if v is not None:
                 mem_out[attr] = int(v)
 
-    cost = compiled.cost_analysis() or {}
+    cost = cost_dict(compiled)
     cost_out = {k: float(v) for k, v in cost.items()
                 if isinstance(v, (int, float)) and (
                     "flops" in k or "bytes" in k or "utilization" in k)}

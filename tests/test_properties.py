@@ -12,6 +12,10 @@
 """
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -e .[test])")
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 

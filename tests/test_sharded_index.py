@@ -1,0 +1,187 @@
+"""Sharded key-space index: routing, equivalence, spill scans, updates.
+
+The contract under test: partitioning is invisible — every sharded path
+(core search, Pallas kernel, range scan, routed updates) returns results
+bit-identical to the monolithic skiplist on the same keys.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sharded as shd
+from repro.core import skiplist as sl
+from repro.data.store import IndexedSampleStore, StoreConfig
+from repro.kernels import ops as kops
+
+
+def _keys(n, seed=0, span=1 << 22):
+    rng = np.random.default_rng(seed)
+    return np.sort(rng.choice(span, n, replace=False)).astype(np.int32), rng
+
+
+def _pair(n=2000, n_shards=4, levels=12, foresight=True, seed=0):
+    keys, rng = _keys(n, seed)
+    vals = (keys * 3).astype(np.int32)
+    cap = int(2 ** np.ceil(np.log2(2 * n + 4)))
+    mono = sl.build(jnp.asarray(keys), jnp.asarray(vals), capacity=cap,
+                    levels=levels, foresight=foresight, seed=seed)
+    shl = shd.build_sharded(jnp.asarray(keys), jnp.asarray(vals),
+                            n_shards=n_shards, levels=levels,
+                            foresight=foresight, seed=seed)
+    return mono, shl, keys, rng
+
+
+def test_route_respects_boundaries():
+    _, shl, keys, _ = _pair()
+    b = np.asarray(shl.boundaries)
+    assert b[0] == np.int32(-(2**31))
+    # a shard's first key routes to that shard; one less routes to s-1
+    for s in range(1, shl.n_shards):
+        assert int(shd.route(shl.boundaries, jnp.asarray([b[s]]))[0]) == s
+        assert int(shd.route(shl.boundaries, jnp.asarray([b[s] - 1]))[0]) == s - 1
+
+
+@pytest.mark.parametrize("foresight", [True, False])
+@pytest.mark.parametrize("n_shards", [2, 4, 8])
+def test_sharded_search_matches_monolithic(foresight, n_shards):
+    mono, shl, keys, rng = _pair(foresight=foresight, n_shards=n_shards)
+    q = jnp.asarray(np.concatenate([
+        rng.choice(keys, 256),
+        rng.integers(0, 1 << 22, 256),
+    ]).astype(np.int32))
+    f_m, v_m = sl.search_fast(mono, q)
+    f_s, v_s = shd.search_sharded(shl, q)
+    np.testing.assert_array_equal(np.asarray(f_s), np.asarray(f_m))
+    np.testing.assert_array_equal(np.asarray(v_s), np.asarray(v_m))
+
+
+@pytest.mark.parametrize("foresight", [True, False])
+def test_sharded_kernel_matches_monolithic(foresight):
+    mono, shl, keys, rng = _pair(foresight=foresight)
+    q = jnp.asarray(np.concatenate([
+        rng.choice(keys, 100),
+        rng.integers(0, 1 << 22, 100),
+    ]).astype(np.int32))
+    rk = kops.search_kernel(shl, q)            # ShardedSkipList dispatch
+    rc = sl.search(mono, q)
+    np.testing.assert_array_equal(np.asarray(rk.found), np.asarray(rc.found))
+    np.testing.assert_array_equal(np.asarray(rk.vals), np.asarray(rc.vals))
+
+
+def test_search_kernel_transparent_past_vmem_budget():
+    """Acceptance: levels=16, cap=2**18 fused (32 MiB > 12 MiB budget)."""
+    keys, rng = _keys(120_000, seed=1, span=1 << 30)
+    mono = sl.build(jnp.asarray(keys), jnp.asarray(keys // 2),
+                    capacity=2**18, levels=16, foresight=True)
+    assert not kops.fits_vmem(mono)
+    q = jnp.asarray(np.concatenate([
+        rng.choice(keys, 128),
+        rng.integers(0, 1 << 30, 128),
+    ]).astype(np.int32))
+    rk = kops.search_kernel(mono, q)           # silently sharded, not capped
+    rc = sl.search(mono, q)
+    np.testing.assert_array_equal(np.asarray(rk.found), np.asarray(rc.found))
+    np.testing.assert_array_equal(np.asarray(rk.vals), np.asarray(rc.vals))
+
+
+def test_shard_state_conversion_preserves_contents():
+    mono, _, keys, rng = _pair(n=1500)
+    shl = kops.shard_state(mono, 4)
+    assert int(shd.total_n(shl)) == int(mono.n)
+    assert bool(shd.check_sharded_invariant(shl))
+    q = jnp.asarray(rng.choice(keys, 200).astype(np.int32))
+    f, v = shd.search_sharded(shl, q)
+    assert bool(jnp.all(f))
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(q) * 3)
+
+
+def test_build_sharded_uneven_and_empty_shards():
+    """n << S*m leaves trailing shards empty; routing must avoid them."""
+    keys = np.arange(10, 110, 10, dtype=np.int32)       # n=10
+    shl = shd.build_sharded(jnp.asarray(keys), jnp.asarray(keys),
+                            n_shards=8, levels=6)
+    f, v = shd.search_sharded(shl, jnp.asarray(keys))
+    assert bool(jnp.all(f))
+    f2, _ = shd.search_sharded(shl, jnp.asarray([5, 115, 1 << 20], jnp.int32))
+    assert not bool(jnp.any(f2))
+    assert bool(shd.check_sharded_invariant(shl))
+
+
+@pytest.mark.parametrize("foresight", [True, False])
+def test_range_scan_spans_shard_boundary(foresight):
+    _, shl, keys, _ = _pair(foresight=foresight)
+    b1 = int(np.asarray(shl.boundaries)[1])             # first key of shard 1
+    lo, hi = b1 - 60000, b1 + 60000
+    ks, vs, count = shd.range_scan_sharded(shl, jnp.int32(lo), jnp.int32(hi),
+                                           256)
+    expect = [int(k) for k in keys if lo <= k < hi]
+    assert len(expect) > 0                               # spans the boundary
+    got = np.asarray(ks)[:int(count)].tolist()
+    assert got == expect[:256]
+    np.testing.assert_array_equal(np.asarray(vs)[:int(count)],
+                                  np.array(expect[:256]) * 3)
+
+
+def test_range_scan_sharded_empty_and_full():
+    _, shl, keys, _ = _pair()
+    # empty range between two adjacent keys
+    gap_lo = int(keys[5]) + 1
+    gap_hi = int(keys[6])
+    if gap_hi > gap_lo:
+        _, _, count = shd.range_scan_sharded(shl, jnp.int32(gap_lo),
+                                             jnp.int32(gap_hi), 16)
+        assert int(count) == 0
+    # whole key space, crossing every shard, truncated by max_out
+    ks, _, count = shd.range_scan_sharded(
+        shl, jnp.int32(0), jnp.int32((1 << 22) + 1), 64)
+    assert int(count) == 64
+    assert np.asarray(ks).tolist() == keys[:64].tolist()
+
+
+def test_apply_ops_sharded_matches_monolithic():
+    mono, shl, keys, rng = _pair(n=1000)
+    ops = jnp.asarray(rng.integers(0, 3, 300), jnp.int32)
+    kk = jnp.asarray(np.concatenate([
+        rng.choice(keys, 150), rng.integers(0, 1 << 22, 150),
+    ]).astype(np.int32))
+    vv = kk * 5
+    mono2, res_m = sl.apply_ops(mono, ops, kk, vv)
+    shl2, res_s = shd.apply_ops_sharded(shl, ops, kk, vv)
+    np.testing.assert_array_equal(np.asarray(res_s), np.asarray(res_m))
+    assert bool(shd.check_sharded_invariant(shl2))
+    assert int(shd.total_n(shl2)) == int(mono2.n)
+    q = jnp.asarray(np.concatenate(
+        [np.asarray(kk), rng.integers(0, 1 << 22, 200)]).astype(np.int32))
+    f_m, v_m = sl.search_fast(mono2, q)
+    f_s, v_s = shd.search_sharded(shl2, q)
+    np.testing.assert_array_equal(np.asarray(f_s), np.asarray(f_m))
+    np.testing.assert_array_equal(np.asarray(v_s), np.asarray(v_m))
+
+
+def test_store_sharded_end_to_end():
+    cfg = StoreConfig(n_samples=512, seq_len=16, index_levels=8, n_shards=4)
+    store = IndexedSampleStore(cfg)
+    assert store.sharded and store.n_shards == 4
+    keys = jnp.asarray(store.keys_np[:64].astype(np.int32))
+    rows, found = store.get_batch(keys)
+    assert bool(jnp.all(found))
+    assert rows.shape == (64, 17)
+    # cross-shard range scan through the store facade
+    lo = int(store.keys_np[0])
+    hi = int(store.keys_np[-1]) + 1
+    ks, vs, count = store.range_scan(lo, hi, 600)
+    assert int(count) == 512
+    np.testing.assert_array_equal(np.asarray(ks)[:512],
+                                  store.keys_np.astype(np.int32))
+    # routed ingest + evict
+    new = jnp.asarray([3, 5, 7], jnp.int32)
+    assert bool(jnp.all(store.ingest(new, new) == 1))
+    assert bool(jnp.all(store.lookup(new)[0]))
+    assert bool(jnp.all(store.evict(new) == 1))
+    assert not bool(jnp.any(store.lookup(new)[0]))
+
+
+def test_store_auto_shards_small_index_stays_monolithic():
+    store = IndexedSampleStore(StoreConfig(n_samples=256, seq_len=8,
+                                           index_levels=8))
+    assert not store.sharded and store.n_shards == 1

@@ -97,7 +97,8 @@ fn, shd, (p_abs, o_abs) = STEP.make_train_step(
 batch = STEP.train_input_specs(cfg, 4, 32)
 with mesh:
     compiled = fn.lower(p_abs, o_abs, batch).compile()
-print("COMPILED_OK", compiled.cost_analysis()["flops"] > 0)
+from repro.launch.costs import cost_dict
+print("COMPILED_OK", cost_dict(compiled)["flops"] > 0)
 """
     env = dict(os.environ, PYTHONPATH="src")
     out = subprocess.run([sys.executable, "-c", code], capture_output=True,

@@ -95,6 +95,36 @@ def test_slot_reuse_after_delete():
 
 
 @pytest.mark.parametrize("foresight", [True, False])
+def test_freelist_reuse_cycles(foresight):
+    """Repeated delete->insert churn recycles slots and keeps the structure
+    (and the foresight invariant) intact — the untested mutation path."""
+    st, keys = _build(cap=512, foresight=foresight)
+    bump_before = int(st.bump)
+    live = {int(k): int(k) * 2 for k in keys}
+    rng = np.random.default_rng(7)
+    for i in range(8):
+        victim = int(rng.choice(sorted(live)))
+        st, ok = sl.delete(st, jnp.int32(victim))
+        assert bool(ok)
+        del live[victim]
+        assert int(st.free_top) == 1         # slot parked on the freelist
+        newk = 200000 + i
+        st, ok = sl.insert(st, jnp.int32(newk), jnp.int32(newk * 2))
+        assert bool(ok)
+        live[newk] = newk * 2
+        assert int(st.free_top) == 0         # ...and popped right back off
+        assert int(st.bump) == bump_before   # never bump-allocated
+        if foresight:
+            assert bool(sl.check_foresight_invariant(st))
+    probe = jnp.asarray(sorted(live), jnp.int32)
+    res = sl.search(st, probe)
+    assert bool(jnp.all(res.found))
+    np.testing.assert_array_equal(
+        np.asarray(res.vals), np.array([live[k] for k in sorted(live)]))
+    assert int(st.n) == len(live)
+
+
+@pytest.mark.parametrize("foresight", [True, False])
 def test_mixed_ops_vs_dict_oracle(foresight):
     rng = np.random.default_rng(3)
     st = sl.empty(2048, 12, foresight=foresight)
@@ -195,6 +225,15 @@ def test_range_scan_empty_and_truncated():
     st, keys = _build(foresight=True)
     ks, vs, count = sl.range_scan(st, jnp.int32(1), jnp.int32(2), 16)
     assert int(count) == 0 or 1 in set(keys.tolist())
+    # exactly-empty range: the open gap between two adjacent keys
+    gap_lo, gap_hi = int(keys[3]) + 1, int(keys[4])
+    if gap_hi > gap_lo:
+        _, _, c = sl.range_scan(st, jnp.int32(gap_lo), jnp.int32(gap_hi), 16)
+        assert int(c) == 0
+    # degenerate range (lo == hi) is always empty
+    _, _, c = sl.range_scan(st, jnp.int32(int(keys[5])),
+                            jnp.int32(int(keys[5])), 16)
+    assert int(c) == 0
     # truncation: tiny max_out
     lo, hi = int(keys[0]), int(keys[-1]) + 1
     ks, vs, count = sl.range_scan(st, jnp.int32(lo), jnp.int32(hi), 8)
