@@ -4,14 +4,29 @@ The paper scales threads 1..128 on a 2^25-element list; our concurrency
 analogue is the query batch width of the lock-step traversal (VPU lanes =
 threads).  List size scaled to CPU (2^15); the trend — Foresight's edge
 holds or grows with "thread" count — is the reproduced claim.
+
+``run_kernel_batch_sweep`` extends the sweep to the sharded Pallas launch:
+the same batch-width axis, dense ``(B//QBLK, S)`` grid vs the clustered
+scalar-prefetch grid, on a Zipf-routed workload — the clustering win
+should grow with batch width (more blocks amortizing fewer tile DMAs).
 """
 from __future__ import annotations
 
-from benchmarks.common import bench, build_list, csv_row, uniform_queries
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (bench, build_list, csv_row, uniform_queries,
+                               zipf_queries)
 from repro.core import skiplist as sl
+from repro.core import sharded as shd
+from repro.kernels import ops as kops
 
 SIZE = 2**15
 BATCHES = [1, 8, 32, 128, 512]
+
+KERNEL_SIZE = 2**12          # interpret-mode kernels are slow; keep modest
+KERNEL_SHARDS = 8
+KERNEL_BATCHES = [128, 512]
 
 
 def run() -> list:
@@ -41,6 +56,32 @@ def run() -> list:
         impf = (perf[False] - perf[True]) / perf[False] * 100
         rows.append(csv_row(f"fig4/batch={b}/gain_fast", 0.0,
                             f"improvement_pct={impf:.1f}"))
+    rows.extend(run_kernel_batch_sweep())
+    return rows
+
+
+def run_kernel_batch_sweep(batches=KERNEL_BATCHES) -> list:
+    """Sharded kernel launch, dense vs clustered, across batch widths."""
+    rows = []
+    keys = np.sort(np.random.default_rng(0).choice(
+        2 * KERNEL_SIZE, KERNEL_SIZE, replace=False)).astype(np.int32)
+    shl = shd.build_sharded(jnp.asarray(keys), jnp.asarray(keys),
+                            n_shards=KERNEL_SHARDS, levels=14)
+    for b in batches:
+        q = zipf_queries(keys, b)
+        per = {}
+        for clustered in (False, True):
+            fn = lambda s, qq: kops.search_kernel_sharded(
+                s, qq, cluster=clustered).found
+            per[clustered] = bench(fn, shl, q, iters=5) / b
+            lbl = "clustered" if clustered else "dense"
+            rows.append(csv_row(
+                f"fig4/batch={b}/kernel_sharded_{lbl}",
+                per[clustered] * 1e6,
+                f"Mops={1e-6/per[clustered]:.3f};shards={KERNEL_SHARDS}"))
+        imp = (per[False] - per[True]) / per[False] * 100
+        rows.append(csv_row(f"fig4/batch={b}/gain_kernel_clustered", 0.0,
+                            f"improvement_pct={imp:.1f}"))
     return rows
 
 

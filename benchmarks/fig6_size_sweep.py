@@ -52,7 +52,13 @@ def run() -> list:
 
 
 def run_kernel_sweep(sizes=KERNEL_SIZES) -> list:
-    """search_kernel across the VMEM cliff (auto-sharded when needed)."""
+    """search_kernel across the VMEM cliff (auto-sharded when needed).
+
+    Past the cliff the sharded launch is timed both ways — the dense
+    ``(B//QBLK, S)`` grid (every tile DMA'd per block) and the clustered
+    scalar-prefetch grid (only routed tiles) — so the clustering win is
+    measured right where auto-dispatch starts paying for it.
+    """
     rows = []
     for n in sizes:
         perk = {}
@@ -72,6 +78,17 @@ def run_kernel_sweep(sizes=KERNEL_SIZES) -> list:
                 f"fig6/size={n}/kernel_{'foresight' if fs else 'base'}",
                 perk[fs] * 1e6,
                 f"Mops={1e-6/perk[fs]:.3f};shards={n_shards[fs]}"))
+            if n_shards[fs] > 1:
+                fd = lambda s, qq: kops.search_kernel(s, qq,
+                                                      cluster=False).found
+                td = bench(fd, idx, q, iters=5) / BATCH
+                lbl = "foresight" if fs else "base"
+                rows.append(csv_row(
+                    f"fig6/size={n}/kernel_{lbl}_dense",
+                    td * 1e6, f"Mops={1e-6/td:.3f};shards={n_shards[fs]}"))
+                rows.append(csv_row(
+                    f"fig6/size={n}/gain_clustered_{lbl}", 0.0,
+                    f"improvement_pct={(td - perk[fs]) / td * 100:.1f}"))
         # NB: base and foresight may auto-shard differently (the fused table
         # is 2x the pointer table), so this gain conflates the gather saving
         # with shard granularity — both counts are recorded for that reason.

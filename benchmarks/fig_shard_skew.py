@@ -1,0 +1,117 @@
+"""Skewed-routing microbenchmark: dense vs clustered sharded launch.
+
+Zipf-routed query batches (YCSB-style hot keys) concentrate on few shards;
+the dense ``(B//QBLK, S)`` grid still DMAs every shard tile for every query
+block, while the clustered scalar-prefetch grid only touches routed tiles.
+This sweep measures both paths across S ∈ {4, 16, 64}:
+
+* ``us_per_call`` — wall time (interpret-mode kernels: trend, not absolute);
+* ``model_bytes`` — the DMA cost model (``ops.dma_model_bytes``): tile
+  loads under revisited-tile coalescing x per-shard tile bytes.  This is
+  the acceptance metric: clustered / dense should drop >= 2x at S=16;
+* ``hlo_bytes`` — ``launch.costs.cost_dict``'s "bytes accessed" of the
+  compiled call, recorded for reference (interpret-mode HLO counts whole
+  operands, so it is insensitive to the per-block DMA skipping the model
+  captures; on a real TPU lowering the two converge).
+
+``python -m benchmarks.fig_shard_skew`` also records the sweep to
+``BENCH_shard_skew.json`` next to the repo root as a regression snapshot.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench, csv_row, zipf_queries
+from repro.core import sharded as shd
+from repro.kernels import ops as kops
+from repro.kernels.foresight_traverse import (foresight_traverse_clustered,
+                                              foresight_traverse_sharded)
+from repro.launch.costs import cost_dict
+
+N_KEYS = 2**13
+BATCH = 1024
+SHARDS = [4, 16, 64]
+LEVELS = 12
+
+_SNAPSHOT = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_shard_skew.json")
+
+
+def _hlo_bytes(fn, *args, **kw) -> float:
+    """"bytes accessed" of the jitted call's compilation, 0.0 if absent."""
+    try:
+        compiled = fn.lower(*args, **kw).compile()
+        return float(cost_dict(compiled).get("bytes accessed", 0.0))
+    except Exception:
+        return 0.0
+
+
+def run() -> list:
+    rows, snap = [], []
+    rng = np.random.default_rng(0)
+    keys = np.sort(rng.choice(1 << 22, N_KEYS, replace=False)).astype(
+        np.int32)
+    for S in SHARDS:
+        shl = shd.build_sharded(jnp.asarray(keys), jnp.asarray(keys),
+                                n_shards=S, levels=LEVELS)
+        q = zipf_queries(keys, BATCH)
+        qp, _ = kops._pad(q)
+        plan = kops.cluster_queries(shl.boundaries, qp)
+        sid = shd.route(shl.boundaries, qp)
+
+        t_dense = bench(
+            lambda s, qq: kops.search_kernel_sharded(
+                s, qq, cluster=False).found, shl, q, iters=3, warmup=1)
+        t_clust = bench(
+            lambda s, qq: kops.search_kernel_sharded(
+                s, qq, cluster=True).found, shl, q, iters=3, warmup=1)
+
+        model_dense = kops.dma_model_bytes(shl, BATCH)
+        model_clust = kops.dma_model_bytes(shl, BATCH, plan.block_sids)
+        hlo_dense = _hlo_bytes(foresight_traverse_sharded,
+                               shl.shards.fused, sid, qp)
+        hlo_clust = _hlo_bytes(foresight_traverse_clustered,
+                               shl.shards.fused, plan.block_sids,
+                               plan.ndist, plan.sid_sorted, plan.q_sorted)
+
+        rows.append(csv_row(f"skew/S={S}/dense", t_dense / BATCH * 1e6,
+                            f"model_bytes={model_dense};"
+                            f"hlo_bytes={hlo_dense:.0f}"))
+        rows.append(csv_row(f"skew/S={S}/clustered", t_clust / BATCH * 1e6,
+                            f"model_bytes={model_clust};"
+                            f"hlo_bytes={hlo_clust:.0f};"
+                            f"K={plan.block_sids.shape[1]}"))
+        ratio = model_dense / max(1, model_clust)
+        rows.append(csv_row(f"skew/S={S}/dma_reduction", 0.0,
+                            f"model_bytes_ratio={ratio:.1f}"))
+        snap.append({
+            "n_shards": S, "batch": BATCH, "n_keys": N_KEYS,
+            "K": int(plan.block_sids.shape[1]),
+            "us_per_call_dense": t_dense * 1e6,
+            "us_per_call_clustered": t_clust * 1e6,
+            "model_bytes_dense": int(model_dense),
+            "model_bytes_clustered": int(model_clust),
+            "model_bytes_ratio": round(ratio, 2),
+            "hlo_bytes_dense": hlo_dense,
+            "hlo_bytes_clustered": hlo_clust,
+        })
+    run.snapshot = snap
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    for r in rows:
+        print(r)
+    with open(_SNAPSHOT, "w") as f:
+        json.dump(run.snapshot, f, indent=2)
+        f.write("\n")
+    print(f"# snapshot -> {_SNAPSHOT}")
+
+
+if __name__ == "__main__":
+    main()

@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV rows (the harness contract).
   fig4   — lane-batch ("thread") sweep           (paper Figs. 4/5)
   fig6   — 128-lane size sweep                   (paper Figs. 6/7)
   fig8   — dependent-gather / node-access counters (paper Fig. 8 / App. A)
+  skew   — Zipf-routed sharded launch: dense vs clustered DMA (beyond-paper)
   macro  — YCSB A/B/C + TPC-C-like store workloads (paper Figs. 9/10)
 
 Roofline/dry-run numbers live in results/ (benchmarks.roofline), not here —
@@ -20,13 +21,14 @@ import time
 def main() -> None:
     from benchmarks import (fig3_sequential, fig4_batch_sweep,
                             fig6_size_sweep, fig8_access_counters,
-                            fig_sync_modes, macro_store)
+                            fig_shard_skew, fig_sync_modes, macro_store)
 
     suites = [
         ("fig3", fig3_sequential.run),
         ("fig4", fig4_batch_sweep.run),
         ("fig6", fig6_size_sweep.run),
         ("fig8", fig8_access_counters.run),
+        ("skew", fig_shard_skew.run),
         ("sync", fig_sync_modes.run),
         ("macro", macro_store.run),
     ]

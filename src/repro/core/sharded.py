@@ -254,16 +254,38 @@ def range_scan_sharded(shl: ShardedSkipList, lo: jax.Array, hi: jax.Array,
 # Routed batched updates (the functional concurrency model, per shard)
 # ---------------------------------------------------------------------------
 
+def shard_segments(sid_sorted: jax.Array, n_shards: int
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Per-shard ``[start, start+len)`` bounds of a shard-sorted array.
+
+    ``sid_sorted`` must be non-decreasing (the stable route-sort order);
+    empty shards get a zero-length segment at their insertion point.
+    """
+    s = jnp.arange(n_shards, dtype=jnp.int32)
+    starts = jnp.searchsorted(sid_sorted, s, side="left").astype(jnp.int32)
+    ends = jnp.searchsorted(sid_sorted, s, side="right").astype(jnp.int32)
+    return starts, ends - starts
+
+
 def apply_ops_sharded(shl: ShardedSkipList, op_types: jax.Array,
                       keys: jax.Array, vals: jax.Array
                       ) -> Tuple[ShardedSkipList, jax.Array]:
     """Apply a linearized mixed-op batch, routed per shard.
 
-    Every shard scans the full batch under ``vmap``, with ops owned by other
-    shards masked to no-op reads — the linearization order is identical to
-    the monolithic ``apply_ops``.  Result lane ``b`` is taken from the shard
-    that owns key ``b``.  Inserts/deletes stay inside the routed shard's key
-    range, so ``boundaries`` remains valid without maintenance.
+    Segment-scoped scan: the batch is stably sorted by routed shard id, so
+    each shard's ops form one contiguous ``[start, start+len)`` segment
+    (``shard_segments``); every shard then scans only a ``W``-wide window
+    (``W`` = the longest segment) sliced at its own start, with positions
+    past its length masked to no-op reads.  Total scan work is ``S * W``
+    ops — ~``B`` when routing is balanced — instead of the dense ``S * B``.
+    Linearization is preserved: shards hold disjoint key ranges, so only
+    the relative order WITHIN a shard is observable, and the stable sort
+    keeps it; results are unsorted back via the inverse permutation, so the
+    outcome is bit-identical to the monolithic ``apply_ops``.
+
+    ``W`` is concretized from the routed batch, so calls under ``jit``
+    (where segment lengths are traced) fall back to the dense full-batch
+    scan — correct, just without the segment saving.
 
     Capacity caveat: each shard has a FIXED capacity, so a key-skewed insert
     stream can exhaust one shard while others have room — those inserts
@@ -271,12 +293,51 @@ def apply_ops_sharded(shl: ShardedSkipList, op_types: jax.Array,
     exhaustion, but reached earlier under skew).  Check the result flags;
     shard split/rebalance is a ROADMAP item.
     """
-    S = shl.n_shards
     op_types = op_types.astype(jnp.int32)
     keys = keys.astype(jnp.int32)
     vals = vals.astype(jnp.int32)
+    S = shl.n_shards
     B = keys.shape[0]
     sid = route(shl.boundaries, keys)
+    perm = jnp.argsort(sid, stable=True)
+    sid_s = sid[perm]
+    starts, lens = shard_segments(sid_s, S)
+    try:
+        W = int(jnp.max(lens)) if B else 0
+    except jax.errors.ConcretizationTypeError:
+        return _apply_ops_sharded_dense(shl, op_types, keys, vals, sid)
+    if W == 0:
+        return shl, jnp.zeros((B,), jnp.int32)
+    # pad the sorted batch by W no-op reads so windows never clamp
+    ops_p = jnp.concatenate([op_types[perm],
+                             jnp.full((W,), OP_READ, jnp.int32)])
+    keys_p = jnp.concatenate([keys[perm], jnp.zeros((W,), jnp.int32)])
+    vals_p = jnp.concatenate([vals[perm], jnp.zeros((W,), jnp.int32)])
+
+    def window(start, ln):
+        o = lax.dynamic_slice(ops_p, (start,), (W,))
+        k = lax.dynamic_slice(keys_p, (start,), (W,))
+        v = lax.dynamic_slice(vals_p, (start,), (W,))
+        return jnp.where(jnp.arange(W) < ln, o, OP_READ), k, v
+
+    ops_w, keys_w, vals_w = jax.vmap(window)(starts, lens)
+    new_shards, res_w = jax.vmap(apply_ops)(shl.shards, ops_w, keys_w,
+                                            vals_w)
+    pos = jnp.arange(B)
+    res_sorted = res_w[sid_s, pos - starts[sid_s]]
+    results = res_sorted[jnp.argsort(perm)]
+    return shl._replace(shards=new_shards), results
+
+
+def _apply_ops_sharded_dense(shl: ShardedSkipList, op_types: jax.Array,
+                             keys: jax.Array, vals: jax.Array,
+                             sid: jax.Array
+                             ) -> Tuple[ShardedSkipList, jax.Array]:
+    """Dense fallback: every shard scans the full batch, off-shard ops
+    masked to no-op reads.  S x B work; used only under tracing where the
+    segment width cannot be concretized."""
+    S = shl.n_shards
+    B = keys.shape[0]
     ops_m = jnp.where(sid[None, :] == jnp.arange(S)[:, None],
                       op_types[None, :], OP_READ)
     keys_m = jnp.broadcast_to(keys[None, :], (S, B))

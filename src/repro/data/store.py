@@ -42,6 +42,9 @@ class StoreConfig:
     foresight: bool = True
     use_kernel: bool = False
     n_shards: int = 0        # 0 = auto (shard only past the VMEM budget)
+    clustered: bool = True   # shard-sort query batches -> DMA only routed
+                             # tiles (kernels/ops.cluster_queries); False
+                             # keeps the dense (B//QBLK, S) launch
     seed: int = 0
 
 
@@ -95,7 +98,8 @@ class IndexedSampleStore:
     def lookup(self, keys: jax.Array) -> Tuple[jax.Array, jax.Array]:
         """Batched key lookup -> (found [B], row_ids [B])."""
         if self.cfg.use_kernel:
-            r = kops.search_kernel(self.index, keys)   # auto-dispatches
+            r = kops.search_kernel(self.index, keys,   # auto-dispatches
+                                   cluster=self.cfg.clustered)
             return r.found, r.vals
         if self.sharded:
             return shd.search_sharded(self.index, keys)

@@ -1,8 +1,10 @@
 """Pallas TPU kernels for the Foresight skiplist (+ pure-jnp oracles)."""
 from repro.kernels.foresight_traverse import (QBLK, base_traverse,
-                                              foresight_traverse)
-from repro.kernels.ops import (KernelSearchResult, fits_vmem, search_kernel,
-                               search_kernel_float, vmem_footprint)
+                                              foresight_traverse,
+                                              traversal_bound)
+from repro.kernels.ops import (KernelSearchResult, cluster_queries,
+                               fits_vmem, search_kernel, search_kernel_float,
+                               search_kernel_sharded, vmem_footprint)
 from repro.kernels.ref import (base_search_ref, decode_float_keys,
                                encode_float_keys, foresight_search_ref)
 from repro.kernels.validated_traverse import validated_traverse

@@ -14,9 +14,41 @@ TPU-native rethink of the paper's mechanism (DESIGN.md §7):
   chained gathers (pointer, then pointee key).  Halving the dependent-gather
   chain is exactly the paper's cache-miss saving, expressed in the
   HBM→VMEM→VREG hierarchy.
-* ``max_steps`` is a static bound (lock-step traversals are wait-free: at
-  most ``levels + total-advances`` iterations; callers size it as
-  ``levels * slack``).  Lanes that finish idle — no divergence.
+* ``max_steps`` is a static SAFETY bound (lock-step traversals are
+  wait-free: at most ``levels + total-advances`` iterations).  The loop
+  itself is an early-exit ``lax.while_loop`` — it stops the moment every
+  lane has settled (``lvl < 0``), so the bound is only a never-paid
+  ceiling, not the iteration count.  ``traversal_bound`` derives the
+  default per tile from levels + occupancy (advances strictly increase
+  the predecessor key, so ``capacity - 2`` bounds them exactly); see its
+  docstring for why this cannot truncate where the old ``4*levels + 16``
+  heuristic theoretically could.
+
+Sharded grids (index > VMEM) come in two flavors:
+
+* ``*_traverse_sharded`` — grid ``(B // QBLK, S)``: every shard tile is
+  DMA'd HBM→VMEM for every query block; tiles with no routed lanes skip the
+  *compute* via ``pl.when`` but still pay the copy.  Kept as the dense
+  reference path (and for un-clustered callers).
+* ``*_traverse_clustered`` — grid ``(B // QBLK, K)`` on
+  ``pltpu.PrefetchScalarGridSpec``: the caller sorts queries by shard id
+  (``ops.cluster_queries``) and prefetches a per-block shard-assignment
+  array ``block_sids [nblk, K]``; the table-tile ``index_map`` reads that
+  scalar ref, so only the tiles a block actually needs are DMA'd.  Slots
+  past a block's distinct-shard count repeat the previous shard id —
+  Pallas coalesces revisited tiles (same block index on consecutive grid
+  steps ⇒ no copy), so padding slots are free, as is the common case where
+  consecutive blocks share a shard.
+
+DMA cost model (see also ``ops.py``): the dense sharded grid moves
+``nblk * S * tile_bytes``; the clustered grid moves ``loads * tile_bytes``
+where ``loads`` counts index-map *transitions* in the flattened
+``block_sids`` visit order — under query locality (Zipf routing, sorted
+batches) ``loads`` approaches ``S`` or even 1, independent of ``nblk``.
+Clustering wins whenever queries cluster (loads << nblk*S); the static K
+must grow toward S only when single blocks straddle many shards (uniform
+routing at small batch), where the clustered grid degenerates to the dense
+one and nothing is lost but the argsort.
 
 Kernels are validated in ``interpret=True`` mode on CPU (bit-exact against
 ``ref.py``); block shapes keep the minor dimension at 128 lanes and the
@@ -31,10 +63,11 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 # ---------------------------------------------------------------------------
-# Shared lock-step traversal loop (all four kernels; they differ only in the
+# Shared lock-step traversal loop (all six kernels; they differ only in the
 # gather strategy — ONE fused gather vs TWO chained — and the lane mask)
 # ---------------------------------------------------------------------------
 
@@ -44,21 +77,48 @@ def _traverse_loop(q, lanes, gather, *, levels: int, max_steps: int):
     ``gather(lvl, x) -> (ptr, foreseen_key)`` embodies the base-vs-foresight
     distinction; ``lanes`` masks out query lanes owned by another shard tile
     (all-true for the monolithic kernels).
+
+    Early exit: the loop is a ``while`` on "any routed lane still live"
+    (``lvl >= 0``), capped at ``max_steps``.  Clustered blocks whose shard
+    drains quickly stop immediately instead of idling out the static bound.
+    Masked-out lanes start settled so they never hold the block open.
     """
     x = jnp.zeros_like(q)
-    lvl = jnp.full_like(q, levels - 1)
+    lvl = jnp.where(lanes, jnp.full_like(q, levels - 1), -1)
 
-    def body(_, carry):
-        x, lvl = carry
-        active = lanes & (lvl >= 0)
+    def cond(carry):
+        step, _, lvl = carry
+        return (step < max_steps) & jnp.any(lvl >= 0)
+
+    def body(carry):
+        step, x, lvl = carry
+        active = lvl >= 0
         ptr, fk = gather(jnp.maximum(lvl, 0), x)
         go = active & (fk < q)
         x = jnp.where(go, ptr, x)
         lvl = jnp.where(go | ~active, lvl, lvl - 1)
-        return x, lvl
+        return step + 1, x, lvl
 
-    x, _ = lax.fori_loop(0, max_steps, body, (x, lvl))
+    _, x, _ = lax.while_loop(cond, body, (jnp.int32(0), x, lvl))
     return x
+
+
+def traversal_bound(levels: int, capacity: int) -> int:
+    """Safety ceiling for the lock-step traversal over a well-formed tile.
+
+    Every loop step either descends (at most ``levels`` of those) or
+    advances, and every advance moves the predecessor to a strictly larger
+    key — so a tile holding at most ``capacity - 2`` live keys (two slots
+    are sentinels) can never need more than ``levels + capacity - 2``
+    steps.  Unlike the historical heuristic ``4*levels + 16`` this ceiling
+    PROVABLY cannot truncate a search (tall-tower tail cases included);
+    and unlike a ``fori_loop`` trip count it is never paid — the
+    early-exit while loop stops at the actual path length, typically
+    ``levels + O(log n)``.  Per-shard tiles inherit a proportionally
+    smaller ceiling through their smaller ``capacity``, which is the
+    occupancy-derived tightening the sharded wrappers share.
+    """
+    return levels + max(2, capacity) - 2 + 16
 
 
 def _fused_gather(fused_tile, cap: int):
@@ -133,7 +193,7 @@ def foresight_traverse(fused: jax.Array, queries: jax.Array, *,
     B = queries.shape[0]
     assert B % QBLK == 0, "pad queries to a multiple of QBLK"
     if max_steps == 0:
-        max_steps = 4 * L + 16
+        max_steps = traversal_bound(L, cap)
     grid = (B // QBLK,)
     kernel = functools.partial(_foresight_kernel, levels=L, cap=cap,
                                max_steps=max_steps)
@@ -227,7 +287,7 @@ def foresight_traverse_sharded(fused: jax.Array, shard_ids: jax.Array,
     B = queries.shape[0]
     assert B % QBLK == 0, "pad queries to a multiple of QBLK"
     if max_steps == 0:
-        max_steps = 4 * L + 16
+        max_steps = traversal_bound(L, cap)
     grid = (B // QBLK, S)
     kernel = functools.partial(_foresight_sharded_kernel, levels=L, cap=cap,
                                max_steps=max_steps)
@@ -261,7 +321,7 @@ def base_traverse_sharded(nxt: jax.Array, keys: jax.Array,
     B = queries.shape[0]
     assert B % QBLK == 0, "pad queries to a multiple of QBLK"
     if max_steps == 0:
-        max_steps = 4 * L + 16
+        max_steps = traversal_bound(L, cap)
     grid = (B // QBLK, S)
     kernel = functools.partial(_base_sharded_kernel, levels=L, cap=cap,
                                max_steps=max_steps)
@@ -287,6 +347,160 @@ def base_traverse_sharded(nxt: jax.Array, keys: jax.Array,
     return node, key
 
 
+# ---------------------------------------------------------------------------
+# Clustered kernels: grid (B // QBLK, K) on PrefetchScalarGridSpec — only
+# the shard tiles a query block actually needs are DMA'd
+# ---------------------------------------------------------------------------
+#
+# The caller (``ops.cluster_queries``) stably sorts the padded query batch
+# by shard id, so each QBLK block of sorted lanes touches a small contiguous
+# run of shards.  Two scalar-prefetch arrays drive the launch:
+#
+# * ``block_sids [nblk, K]`` — slot k of block j names the k-th distinct
+#   shard among block j's lanes; slots past the distinct count repeat the
+#   block's last shard so the table-tile index_map re-selects the resident
+#   tile (coalesced ⇒ no DMA).
+# * ``ndist [nblk]`` — the distinct-shard count; slots with ``k >= ndist``
+#   skip compute entirely via ``pl.when`` (their lanes were already served
+#   by the earlier slot holding the same shard id).
+#
+# Outputs are indexed by j only, so the output block stays resident across
+# the K minor steps (same revisited-block accumulation as the dense grid).
+
+def _foresight_clustered_kernel(bsids_ref, ndist_ref, q_ref, sid_ref,
+                                fused_ref, node_ref, key_ref, *,
+                                levels: int, cap: int, max_steps: int):
+    j = pl.program_id(0)
+    k = pl.program_id(1)
+    q = q_ref[...]                                   # [QBLK] shard-sorted
+    mine = sid_ref[...] == bsids_ref[j, k]
+
+    @pl.when(k == 0)
+    def _init():
+        node_ref[...] = jnp.zeros_like(q)
+        key_ref[...] = jnp.zeros_like(q)
+
+    @pl.when(k < ndist_ref[j])
+    def _traverse():
+        gather = _fused_gather(fused_ref[...], cap)  # [1, L, cap, 2] tile
+        x = _traverse_loop(q, mine, gather, levels=levels,
+                           max_steps=max_steps)
+        node, key = gather(jnp.zeros_like(q), x)
+        node_ref[...] = jnp.where(mine, node, node_ref[...])
+        key_ref[...] = jnp.where(mine, key, key_ref[...])
+
+
+def _base_clustered_kernel(bsids_ref, ndist_ref, q_ref, sid_ref, nxt_ref,
+                           keys_ref, node_ref, key_ref, *,
+                           levels: int, cap: int, max_steps: int):
+    j = pl.program_id(0)
+    k = pl.program_id(1)
+    q = q_ref[...]
+    mine = sid_ref[...] == bsids_ref[j, k]
+
+    @pl.when(k == 0)
+    def _init():
+        node_ref[...] = jnp.zeros_like(q)
+        key_ref[...] = jnp.zeros_like(q)
+
+    @pl.when(k < ndist_ref[j])
+    def _traverse():
+        gather = _base_gather(nxt_ref[...], keys_ref[...], cap)
+        x = _traverse_loop(q, mine, gather, levels=levels,
+                           max_steps=max_steps)
+        node, key = gather(jnp.zeros_like(q), x)
+        node_ref[...] = jnp.where(mine, node, node_ref[...])
+        key_ref[...] = jnp.where(mine, key, key_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("max_steps", "interpret"))
+def foresight_traverse_clustered(fused: jax.Array, block_sids: jax.Array,
+                                 ndist: jax.Array, shard_ids: jax.Array,
+                                 queries: jax.Array, *, max_steps: int = 0,
+                                 interpret: bool = True):
+    """Clustered foresight search over ``fused [S, L, cap, 2]``.
+
+    ``queries``/``shard_ids`` must be shard-sorted and ``block_sids [nblk,
+    K]`` / ``ndist [nblk]`` built for that order (``ops.cluster_queries``).
+    Returns (node[B], cand_key[B]) in the SORTED order; the caller unsorts
+    with the inverse permutation.
+    """
+    S, L, cap, _ = fused.shape
+    B = queries.shape[0]
+    nblk, K = block_sids.shape
+    assert B == nblk * QBLK, "queries must be padded to block_sids' blocks"
+    if max_steps == 0:
+        max_steps = traversal_bound(L, cap)
+    kernel = functools.partial(_foresight_clustered_kernel, levels=L,
+                               cap=cap, max_steps=max_steps)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(nblk, K),
+        in_specs=[
+            pl.BlockSpec((QBLK,), lambda j, k, bs, nd: (j,)),
+            pl.BlockSpec((QBLK,), lambda j, k, bs, nd: (j,)),
+            pl.BlockSpec((1, L, cap, 2),
+                         lambda j, k, bs, nd: (bs[j, k], 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((QBLK,), lambda j, k, bs, nd: (j,)),
+            pl.BlockSpec((QBLK,), lambda j, k, bs, nd: (j,)),
+        ],
+    )
+    node, key = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(block_sids.astype(jnp.int32), ndist.astype(jnp.int32),
+      queries.astype(jnp.int32), shard_ids.astype(jnp.int32), fused)
+    return node, key
+
+
+@functools.partial(jax.jit, static_argnames=("max_steps", "interpret"))
+def base_traverse_clustered(nxt: jax.Array, keys: jax.Array,
+                            block_sids: jax.Array, ndist: jax.Array,
+                            shard_ids: jax.Array, queries: jax.Array, *,
+                            max_steps: int = 0, interpret: bool = True):
+    """Clustered base search over ``nxt [S, L, cap]`` / ``keys [S, cap]``."""
+    S, L, cap = nxt.shape
+    B = queries.shape[0]
+    nblk, K = block_sids.shape
+    assert B == nblk * QBLK, "queries must be padded to block_sids' blocks"
+    if max_steps == 0:
+        max_steps = traversal_bound(L, cap)
+    kernel = functools.partial(_base_clustered_kernel, levels=L, cap=cap,
+                               max_steps=max_steps)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(nblk, K),
+        in_specs=[
+            pl.BlockSpec((QBLK,), lambda j, k, bs, nd: (j,)),
+            pl.BlockSpec((QBLK,), lambda j, k, bs, nd: (j,)),
+            pl.BlockSpec((1, L, cap), lambda j, k, bs, nd: (bs[j, k], 0, 0)),
+            pl.BlockSpec((1, cap), lambda j, k, bs, nd: (bs[j, k], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((QBLK,), lambda j, k, bs, nd: (j,)),
+            pl.BlockSpec((QBLK,), lambda j, k, bs, nd: (j,)),
+        ],
+    )
+    node, key = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(block_sids.astype(jnp.int32), ndist.astype(jnp.int32),
+      queries.astype(jnp.int32), shard_ids.astype(jnp.int32), nxt, keys)
+    return node, key
+
+
 @functools.partial(jax.jit, static_argnames=("max_steps", "interpret"))
 def base_traverse(nxt: jax.Array, keys: jax.Array, queries: jax.Array, *,
                   max_steps: int = 0, interpret: bool = True):
@@ -295,7 +509,7 @@ def base_traverse(nxt: jax.Array, keys: jax.Array, queries: jax.Array, *,
     B = queries.shape[0]
     assert B % QBLK == 0, "pad queries to a multiple of QBLK"
     if max_steps == 0:
-        max_steps = 4 * L + 16
+        max_steps = traversal_bound(L, cap)
     grid = (B // QBLK,)
     kernel = functools.partial(_base_kernel, levels=L, cap=cap,
                                max_steps=max_steps)

@@ -18,24 +18,52 @@ so e.g. ``levels=16, capacity=2**18`` fused is 32 MiB — past the budget.
 space is partitioned into ``S`` contiguous range shards (smallest power of
 two whose per-shard tile fits, see ``auto_shards``), queries are routed
 host-free via ``jnp.searchsorted`` on the shard boundaries, and one
-``pallas_call`` with grid ``(B // QBLK, S)`` streams the per-shard tiles
-through VMEM (``core.sharded`` holds the data structure, the sharded
-kernels live in ``foresight_traverse.py``).
+``pallas_call`` streams the per-shard tiles through VMEM (``core.sharded``
+holds the data structure, the sharded kernels live in
+``foresight_traverse.py``).
+
+Query clustering (the scalar-prefetch launch)
+---------------------------------------------
+The dense sharded grid ``(B // QBLK, S)`` DMAs every shard tile for every
+query block — ``pl.when`` skips the compute of unrouted tiles but not the
+copy.  ``cluster_queries`` removes that waste: a stable argsort on the
+routed shard ids yields contiguous per-shard query segments (plus the
+inverse permutation to unsort results bit-identically), so each QBLK block
+of sorted lanes straddles only a short run of shards.  The launch becomes
+grid ``(B // QBLK, K)`` on ``pltpu.PrefetchScalarGridSpec`` with K = the
+max distinct shards any block touches (rounded up to a power of two to
+bound recompiles, clamped to S): the prefetched ``block_sids [nblk, K]``
+array drives the table-tile ``index_map``, so ONLY the owning tiles are
+DMA'd and padding slots coalesce onto the resident tile for free.
+
+DMA cost model: dense moves ``nblk * S * tile_bytes``; clustered moves
+``dma_model_tile_loads(block_sids) * tile_bytes`` — the number of
+index-map transitions in visit order.  Clustering wins whenever queries
+exhibit shard locality (skewed/Zipf routing, sorted key batches): loads
+collapses toward S (or 1) independent of batch size.  K must grow toward S
+only when a single 128-lane block straddles many shards — uniform routing
+with tiny batches — where the clustered grid degenerates to the dense one
+and the only overhead left is the argsort.
 """
 from __future__ import annotations
 
 import functools
+import warnings
+from collections import OrderedDict
 from typing import NamedTuple, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import sharded as shd
 from repro.core.skiplist import NULL_VAL, SkipListState
 from repro.core.sharded import ShardedSkipList
 from repro.kernels.foresight_traverse import (QBLK, base_traverse,
+                                              base_traverse_clustered,
                                               base_traverse_sharded,
                                               foresight_traverse,
+                                              foresight_traverse_clustered,
                                               foresight_traverse_sharded)
 from repro.kernels.ref import encode_float_keys
 
@@ -113,20 +141,146 @@ def shard_state(state: SkipListState, n_shards: int) -> ShardedSkipList:
                              foresight=state.foresight, valid=valid)
 
 
-def search_kernel_sharded(shl: ShardedSkipList, queries: jax.Array, *,
-                          max_steps: int = 0, interpret: bool = True
-                          ) -> KernelSearchResult:
-    """Kernel-backed search over a partitioned index (grid (B//QBLK, S))."""
-    q, B = _pad(queries.astype(jnp.int32))
-    sid = shd.route(shl.boundaries, q)
-    if shl.foresight:
-        node, ckey = foresight_traverse_sharded(
-            shl.shards.fused, sid, q, max_steps=max_steps,
-            interpret=interpret)
+# ---------------------------------------------------------------------------
+# Query clustering: shard-sort the batch so each block touches 1-2 tiles
+# ---------------------------------------------------------------------------
+
+class ClusterPlan(NamedTuple):
+    """Shard-sorted launch plan for the scalar-prefetch clustered kernels."""
+
+    q_sorted: jax.Array     # [Bp] queries in shard-sorted order
+    sid_sorted: jax.Array   # [Bp] matching shard ids (non-decreasing)
+    inv: jax.Array          # [Bp] inverse permutation: sorted -> original
+    block_sids: jax.Array   # [nblk, K] k-th distinct shard of each block
+    ndist: jax.Array        # [nblk] distinct-shard count per block
+
+
+def cluster_queries(boundaries: jax.Array, q_padded: jax.Array, *,
+                    k_shards: int = 0) -> ClusterPlan:
+    """Build the clustered launch plan for a padded query batch.
+
+    A stable argsort on the routed shard id makes per-shard query segments
+    contiguous, so QBLK-lane blocks straddle only adjacent shards; the
+    inverse permutation restores the original order bit-identically.
+    ``block_sids[j, k]`` names block j's k-th distinct shard; slots past
+    ``ndist[j]`` repeat the block's last shard so the kernel's table-tile
+    index_map re-selects the resident tile (a coalesced, DMA-free step).
+
+    ``k_shards=0`` auto-sizes K to the max distinct-shard count of any
+    block, rounded up to a power of two (bounds jit recompiles to log2
+    variants) and clamped to S.  Auto-sizing concretizes that count, so
+    call this OUTSIDE jit (as ``search_kernel_sharded`` does) or pass an
+    explicit ``k_shards``.
+    """
+    S = boundaries.shape[0]
+    Bp = q_padded.shape[0]
+    assert Bp % QBLK == 0, "pad queries to a multiple of QBLK first"
+    nblk = Bp // QBLK
+    sid = shd.route(boundaries, q_padded)
+    perm = jnp.argsort(sid, stable=True)
+    q_sorted = q_padded[perm]
+    sid_sorted = sid[perm]
+    inv = jnp.argsort(perm)
+
+    sid_blk = sid_sorted.reshape(nblk, QBLK)
+    # first lane of each within-block run of equal shard ids
+    first = jnp.concatenate(
+        [jnp.ones((nblk, 1), jnp.bool_), sid_blk[:, 1:] != sid_blk[:, :-1]],
+        axis=1)
+    slot = jnp.cumsum(first, axis=1) - 1             # distinct-run index
+    ndist = (slot[:, -1] + 1).astype(jnp.int32)
+    if k_shards == 0:
+        kmax = int(jnp.max(ndist))
+        K = 1 << (kmax - 1).bit_length() if kmax > 1 else 1
+        K = min(K, S)
     else:
-        node, ckey = base_traverse_sharded(
-            shl.shards.nxt, shl.shards.keys, sid, q, max_steps=max_steps,
-            interpret=interpret)
+        K = k_shards
+        try:   # an undersized explicit K would silently drop lanes
+            assert K >= int(jnp.max(ndist)), \
+                f"k_shards={K} < widest block's {int(jnp.max(ndist))} shards"
+        except jax.errors.ConcretizationTypeError:
+            pass                         # traced: caller vouches for K
+    assert K >= 1
+    rows = jnp.broadcast_to(jnp.arange(nblk)[:, None], (nblk, QBLK))
+    block_sids = jnp.zeros((nblk, K), jnp.int32)
+    block_sids = block_sids.at[rows, jnp.minimum(slot, K - 1)].set(sid_blk)
+    # padding slots repeat the last distinct shard -> coalesced re-select
+    block_sids = jnp.where(jnp.arange(K)[None, :] < ndist[:, None],
+                           block_sids, sid_blk[:, -1:])
+    return ClusterPlan(q_sorted, sid_sorted, inv, block_sids, ndist)
+
+
+def dma_model_tile_loads(block_sids: jax.Array) -> int:
+    """Tiles DMA'd by the clustered launch under revisited-tile coalescing.
+
+    The grid visits ``block_sids`` row-major (K minor); a step whose tile
+    index equals the previous step's reuses the resident tile.  Loads =
+    transitions + 1.  The dense grid's analogue is ``nblk * S``.
+    """
+    seq = np.asarray(block_sids).reshape(-1)
+    if seq.size == 0:
+        return 0
+    return 1 + int(np.sum(seq[1:] != seq[:-1]))
+
+
+def dma_model_bytes(shl: ShardedSkipList, n_queries: int,
+                    block_sids=None) -> int:
+    """Modeled HBM->VMEM index-tile traffic for one sharded search call.
+
+    ``block_sids=None`` models the dense ``(nblk, S)`` grid (every tile per
+    block); passing a plan's ``block_sids`` models the clustered grid.
+    """
+    Bp = n_queries + (-n_queries) % QBLK
+    nblk = Bp // QBLK
+    tile = shard_vmem_footprint(shl.levels, shl.shard_capacity,
+                                shl.foresight)
+    if block_sids is None:
+        return nblk * shl.n_shards * tile
+    return dma_model_tile_loads(block_sids) * tile
+
+
+def search_kernel_sharded(shl: ShardedSkipList, queries: jax.Array, *,
+                          max_steps: int = 0, interpret: bool = True,
+                          cluster: bool = True) -> KernelSearchResult:
+    """Kernel-backed search over a partitioned index.
+
+    ``cluster=True`` (default) launches the scalar-prefetch clustered grid
+    ``(B//QBLK, K)`` — only routed tiles are DMA'd; results are unsorted
+    back so the output is bit-identical to ``cluster=False`` (the dense
+    ``(B//QBLK, S)`` grid, kept for comparison benchmarks).  Under ``jit``
+    the auto-sized K cannot concretize, so the call transparently falls
+    back to the dense launch — correct, traceable, just without the DMA
+    saving (same contract as ``apply_ops_sharded``'s fallback).
+    """
+    q, B = _pad(queries.astype(jnp.int32))
+    if cluster:
+        try:
+            plan = cluster_queries(shl.boundaries, q)
+        except jax.errors.ConcretizationTypeError:
+            cluster = False              # traced batch: dense launch
+    if cluster:
+        if shl.foresight:
+            node, ckey = foresight_traverse_clustered(
+                shl.shards.fused, plan.block_sids, plan.ndist,
+                plan.sid_sorted, plan.q_sorted, max_steps=max_steps,
+                interpret=interpret)
+        else:
+            node, ckey = base_traverse_clustered(
+                shl.shards.nxt, shl.shards.keys, plan.block_sids,
+                plan.ndist, plan.sid_sorted, plan.q_sorted,
+                max_steps=max_steps, interpret=interpret)
+        node, ckey = node[plan.inv], ckey[plan.inv]   # unsort: bit-identical
+        sid = plan.sid_sorted[plan.inv]
+    else:
+        sid = shd.route(shl.boundaries, q)
+        if shl.foresight:
+            node, ckey = foresight_traverse_sharded(
+                shl.shards.fused, sid, q, max_steps=max_steps,
+                interpret=interpret)
+        else:
+            node, ckey = base_traverse_sharded(
+                shl.shards.nxt, shl.shards.keys, sid, q,
+                max_steps=max_steps, interpret=interpret)
     node, ckey, sid = node[:B], ckey[:B], sid[:B]
     found = ckey == queries.astype(jnp.int32)
     cap = shl.shard_capacity
@@ -136,26 +290,54 @@ def search_kernel_sharded(shl: ShardedSkipList, queries: jax.Array, *,
     return KernelSearchResult(found, vals, gnode)
 
 
+# Oversized-monolith conversions, keyed on object identity.  The strong
+# reference to the source state both validates the id key (no reuse while
+# the entry lives) and keeps the conversion warm across repeated calls;
+# the LRU bound caps the retained memory at a handful of index pairs.
+_SHARD_CACHE: "OrderedDict[int, Tuple[SkipListState, ShardedSkipList]]" = \
+    OrderedDict()
+_SHARD_CACHE_MAX = 4
+
+
+def _shard_cached(state: SkipListState) -> ShardedSkipList:
+    ent = _SHARD_CACHE.get(id(state))
+    if ent is not None and ent[0] is state:
+        _SHARD_CACHE.move_to_end(id(state))
+        return ent[1]
+    n = state.capacity - 2                         # static upper bound on n
+    shl = shard_state(state, auto_shards(n, state.levels, state.foresight))
+    _SHARD_CACHE[id(state)] = (state, shl)
+    while len(_SHARD_CACHE) > _SHARD_CACHE_MAX:
+        _SHARD_CACHE.popitem(last=False)
+    return shl
+
+
 def search_kernel(state: Union[SkipListState, ShardedSkipList],
                   queries: jax.Array, *, max_steps: int = 0,
-                  interpret: bool = True) -> KernelSearchResult:
+                  interpret: bool = True,
+                  cluster: bool = True) -> KernelSearchResult:
     """Kernel-backed batched search on either variant; resolves found/vals.
 
     Auto-dispatch: a ``ShardedSkipList`` (or a monolithic state whose table
     exceeds the VMEM budget) takes the sharded key-space path; small
     monolithic states take the single-tile kernel.  The oversized-monolith
-    branch rebuilds shards on every call (see ``shard_state``) — correct,
-    but callers on a hot path should pre-shard.
+    branch converts via an identity-keyed cache (``_shard_cached``), so
+    repeated searches on the SAME state object pay the rebuild once — but
+    every new state (e.g. after an update) rebuilds; that path is
+    deprecated in favor of holding a ``ShardedSkipList`` directly.
     """
     if isinstance(state, ShardedSkipList):
         return search_kernel_sharded(state, queries, max_steps=max_steps,
-                                     interpret=interpret)
+                                     interpret=interpret, cluster=cluster)
     if not fits_vmem(state):
-        n = state.capacity - 2                     # static upper bound on n
-        shl = shard_state(state, auto_shards(n, state.levels,
-                                             state.foresight))
-        return search_kernel_sharded(shl, queries, max_steps=max_steps,
-                                     interpret=interpret)
+        warnings.warn(
+            "search_kernel on an over-VMEM monolithic state re-shards "
+            "per state object (cached by identity); build a "
+            "ShardedSkipList once instead — this path is deprecated",
+            DeprecationWarning, stacklevel=2)
+        return search_kernel_sharded(_shard_cached(state), queries,
+                                     max_steps=max_steps,
+                                     interpret=interpret, cluster=cluster)
     q, B = _pad(queries.astype(jnp.int32))
     if state.foresight:
         node, ckey = foresight_traverse(state.fused, q, max_steps=max_steps,
@@ -171,7 +353,9 @@ def search_kernel(state: Union[SkipListState, ShardedSkipList],
 
 def search_kernel_float(state: Union[SkipListState, ShardedSkipList],
                         float_queries: jax.Array, *, max_steps: int = 0,
-                        interpret: bool = True) -> KernelSearchResult:
+                        interpret: bool = True,
+                        cluster: bool = True) -> KernelSearchResult:
     """Float-keyed search (keys must have been encoded at build time)."""
     return search_kernel(state, encode_float_keys(float_queries),
-                         max_steps=max_steps, interpret=interpret)
+                         max_steps=max_steps, interpret=interpret,
+                         cluster=cluster)

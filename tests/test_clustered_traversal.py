@@ -1,0 +1,241 @@
+"""Query-clustered sharded traversal: the unsort permutation contract.
+
+The clustered scalar-prefetch launch (``ops.cluster_queries`` + the
+``*_traverse_clustered`` kernels) must be bit-identical to the dense
+``(B//QBLK, S)`` sharded kernel AND to ``core.search_sharded`` — including
+the named edge cases: all lanes on one shard, one lane per shard, and
+batches whose padded tail crosses block boundaries.  Also covers the
+segment-scoped ``apply_ops_sharded`` bounds and the traversal step-bound
+helper shared by all kernel wrappers.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sharded as shd
+from repro.core import skiplist as sl
+from repro.kernels import ops as kops
+from repro.kernels.foresight_traverse import QBLK, traversal_bound
+
+
+def _index(n=1500, n_shards=8, levels=12, foresight=True, seed=0,
+           span=1 << 22):
+    rng = np.random.default_rng(seed)
+    keys = np.sort(rng.choice(span, n, replace=False)).astype(np.int32)
+    vals = (keys * 3).astype(np.int32)
+    shl = shd.build_sharded(jnp.asarray(keys), jnp.asarray(vals),
+                            n_shards=n_shards, levels=levels,
+                            foresight=foresight, seed=seed)
+    return shl, keys, rng
+
+
+def _assert_clustered_matches(shl, q):
+    rc = kops.search_kernel_sharded(shl, q, cluster=True)
+    rd = kops.search_kernel_sharded(shl, q, cluster=False)
+    for a, b in zip(rc, rd):                       # found, vals, node
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    f, v = shd.search_sharded(shl, q)
+    np.testing.assert_array_equal(np.asarray(rc.found), np.asarray(f))
+    np.testing.assert_array_equal(np.asarray(rc.vals), np.asarray(v))
+
+
+@pytest.mark.parametrize("foresight", [True, False])
+def test_clustered_bit_identical_mixed_batch(foresight):
+    shl, keys, rng = _index(foresight=foresight)
+    q = jnp.asarray(np.concatenate([
+        rng.choice(keys, 150),
+        rng.integers(0, 1 << 22, 106),             # padded tail: 256 -> 2 blks
+    ]).astype(np.int32))
+    _assert_clustered_matches(shl, q)
+
+
+def test_clustered_all_lanes_one_shard():
+    shl, keys, _ = _index()
+    b = np.asarray(shl.boundaries)
+    lo, hi = int(b[2]), int(b[3])                  # keys inside shard 2 only
+    inside = keys[(keys >= lo) & (keys < hi)]
+    q = jnp.asarray(np.resize(inside, 2 * QBLK).astype(np.int32))
+    plan = kops.cluster_queries(shl.boundaries, q)
+    assert plan.block_sids.shape[1] == 1           # K collapses to 1
+    assert np.all(np.asarray(plan.ndist) == 1)
+    _assert_clustered_matches(shl, q)
+
+
+def test_clustered_one_lane_per_shard():
+    """Adversarial spread: a single block straddles every shard -> K = S."""
+    shl, _, _ = _index(n_shards=8)
+    b = np.asarray(shl.boundaries).astype(np.int64)
+    q = jnp.asarray(np.concatenate([b[1:], [b[-1] + 1]]).astype(np.int32))
+    plan = kops.cluster_queries(shl.boundaries, kops._pad(q)[0])
+    assert plan.block_sids.shape[1] == shl.n_shards
+    _assert_clustered_matches(shl, q)
+
+
+def test_clustered_padded_tail():
+    """B not a multiple of QBLK: pad lanes ride along and are dropped."""
+    shl, keys, rng = _index()
+    for B in (1, QBLK - 1, QBLK + 1, 3 * QBLK + 7):
+        q = jnp.asarray(rng.choice(keys, B).astype(np.int32))
+        _assert_clustered_matches(shl, q)
+
+
+def test_cluster_plan_is_permutation_and_covers_lanes():
+    shl, keys, rng = _index()
+    q = jnp.asarray(rng.integers(0, 1 << 22, 4 * QBLK).astype(np.int32))
+    plan = kops.cluster_queries(shl.boundaries, q)
+    perm_back = np.asarray(plan.q_sorted)[np.asarray(plan.inv)]
+    np.testing.assert_array_equal(perm_back, np.asarray(q))
+    sid_sorted = np.asarray(plan.sid_sorted)
+    assert np.all(np.diff(sid_sorted) >= 0)        # stable shard order
+    bs, nd = np.asarray(plan.block_sids), np.asarray(plan.ndist)
+    for j in range(bs.shape[0]):
+        blk = sid_sorted[j * QBLK:(j + 1) * QBLK]
+        distinct = np.unique(blk)
+        assert nd[j] == len(distinct)              # every lane has a slot
+        np.testing.assert_array_equal(bs[j, :nd[j]], distinct)
+        assert np.all(bs[j, nd[j]:] == blk[-1])    # padding coalesces
+
+
+def test_dma_model_clustered_zipf_reduction():
+    """Acceptance: Zipf batch at S=16 -> >= 2x fewer modeled DMA bytes."""
+    from benchmarks.common import zipf_queries
+    shl, keys, _ = _index(n=2**13, n_shards=16)
+    q = zipf_queries(keys, 1024)
+    plan = kops.cluster_queries(shl.boundaries, kops._pad(q)[0])
+    dense = kops.dma_model_bytes(shl, 1024)
+    clustered = kops.dma_model_bytes(shl, 1024, plan.block_sids)
+    assert dense >= 2 * clustered
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("foresight", [True, False])
+def test_clustered_random_batches_seeded(foresight):
+    """Deterministic stand-in for the hypothesis sweep (runs sans deps)."""
+    shl, keys, _ = _index(n=800, n_shards=4, levels=10, foresight=foresight)
+    for seed in range(6):
+        rng = np.random.default_rng(seed)
+        B = int(rng.integers(1, 2 * QBLK))
+        q = np.concatenate([rng.integers(0, 1 << 22, B),
+                            rng.choice(keys, int(rng.integers(0, 50)))])
+        _assert_clustered_matches(shl, jnp.asarray(q.astype(np.int32)))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("foresight", [True, False])
+def test_clustered_property_random_batches(foresight):
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    shl, keys, _ = _index(n=800, n_shards=4, levels=10, foresight=foresight)
+
+    @settings(max_examples=15, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(qs=st.lists(st.integers(0, (1 << 22) - 1), min_size=1,
+                       max_size=2 * QBLK),
+           hits=st.integers(0, 50), seed=st.integers(0, 2**31 - 1))
+    def check(qs, hits, seed):
+        rng = np.random.default_rng(seed)
+        q = np.asarray(qs + rng.choice(keys, hits).tolist(), np.int32)
+        _assert_clustered_matches(shl, jnp.asarray(q))
+
+    check()
+
+
+# ---------------------------------------------------------------------------
+# Segment-scoped apply_ops_sharded
+# ---------------------------------------------------------------------------
+
+def test_shard_segments_bounds():
+    """Each shard's [start, start+len) covers exactly its sorted ops."""
+    sid_sorted = jnp.asarray([0, 0, 0, 2, 2, 5, 5, 5, 5], jnp.int32)
+    starts, lens = shd.shard_segments(sid_sorted, 8)
+    np.testing.assert_array_equal(np.asarray(starts),
+                                  [0, 3, 3, 5, 5, 5, 9, 9])
+    np.testing.assert_array_equal(np.asarray(lens),
+                                  [3, 0, 2, 0, 0, 4, 0, 0])
+    # windows are W = max(lens) wide, not the batch width: under skew the
+    # per-shard scan is bounded by the largest segment (here 4 of 9 ops)
+    assert int(jnp.max(lens)) == 4 < sid_sorted.shape[0]
+
+
+def test_apply_ops_sharded_segment_scoped_matches_monolithic():
+    rng = np.random.default_rng(3)
+    keys = np.sort(rng.choice(1 << 22, 1000, replace=False)).astype(np.int32)
+    cap = int(2 ** np.ceil(np.log2(2 * 1000 + 4)))
+    mono = sl.build(jnp.asarray(keys), jnp.asarray(keys * 3), capacity=cap,
+                    levels=12, seed=0)
+    shl = shd.build_sharded(jnp.asarray(keys), jnp.asarray(keys * 3),
+                            n_shards=8, levels=12, seed=0)
+    # skew every op onto one shard: worst case still only scans one segment
+    b1, b2 = int(np.asarray(shl.boundaries)[1]), \
+        int(np.asarray(shl.boundaries)[2])
+    kk = jnp.asarray(rng.integers(b1, b2, 200).astype(np.int32))
+    ops = jnp.asarray(rng.integers(0, 3, 200), jnp.int32)
+    mono2, res_m = sl.apply_ops(mono, ops, kk, kk * 5)
+    shl2, res_s = shd.apply_ops_sharded(shl, ops, kk, kk * 5)
+    np.testing.assert_array_equal(np.asarray(res_s), np.asarray(res_m))
+    assert bool(shd.check_sharded_invariant(shl2))
+    assert int(shd.total_n(shl2)) == int(mono2.n)
+    q = jnp.asarray(rng.integers(0, 1 << 22, 300).astype(np.int32))
+    f_m, v_m = sl.search_fast(mono2, q)
+    f_s, v_s = shd.search_sharded(shl2, q)
+    np.testing.assert_array_equal(np.asarray(f_s), np.asarray(f_m))
+    np.testing.assert_array_equal(np.asarray(v_s), np.asarray(v_m))
+
+
+def test_apply_ops_sharded_under_jit_falls_back_dense():
+    """Traced segment widths can't concretize; the jitted call must still
+    produce identical results via the dense fallback."""
+    shl, keys, rng = _index(n=400, n_shards=4, levels=10)
+    ops = jnp.asarray(rng.integers(0, 3, 64), jnp.int32)
+    kk = jnp.asarray(rng.choice(keys, 64).astype(np.int32))
+    eager = shd.apply_ops_sharded(shl, ops, kk, kk * 5)
+    jitted = jax.jit(shd.apply_ops_sharded)(shl, ops, kk, kk * 5)
+    np.testing.assert_array_equal(np.asarray(eager[1]), np.asarray(jitted[1]))
+    for a, b in zip(jax.tree.leaves(eager[0]), jax.tree.leaves(jitted[0])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# traversal_bound + shard cache
+# ---------------------------------------------------------------------------
+
+def test_traversal_bound_safe_ceiling_scales_with_occupancy():
+    # provably sufficient: levels descents + (capacity - 2) advances + slack
+    assert traversal_bound(16, 2**18) == 16 + 2**18 - 2 + 16
+    # never below the old 4*L + 16 heuristic (cannot newly truncate)
+    for L, cap in ((12, 2**12), (16, 2**8), (20, 64)):
+        assert traversal_bound(L, cap) >= 4 * L + 16 or cap < 4 * L
+    # per-shard tiles inherit a proportionally smaller ceiling
+    assert traversal_bound(16, 2**8) < traversal_bound(16, 2**18)
+
+
+def test_search_kernel_sharded_traceable_under_jit():
+    """cluster=True must fall back to the dense launch under tracing."""
+    shl, keys, rng = _index(n=400, n_shards=4, levels=10)
+    q = jnp.asarray(rng.choice(keys, 64).astype(np.int32))
+    eager = kops.search_kernel_sharded(shl, q)
+    jitted = jax.jit(kops.search_kernel_sharded)(shl, q)
+    for a, b in zip(eager, jitted):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.slow
+def test_shard_cache_reuses_conversion():
+    rng = np.random.default_rng(1)
+    keys = np.sort(rng.choice(1 << 30, 120_000, replace=False)).astype(
+        np.int32)
+    mono = sl.build(jnp.asarray(keys), jnp.asarray(keys // 2),
+                    capacity=2**18, levels=16, foresight=True)
+    assert not kops.fits_vmem(mono)
+    kops._SHARD_CACHE.clear()
+    with pytest.deprecated_call():
+        r1 = kops.search_kernel(mono, jnp.asarray(keys[:64]))
+    shl_cached = kops._SHARD_CACHE[id(mono)][1]
+    with pytest.deprecated_call():
+        r2 = kops.search_kernel(mono, jnp.asarray(keys[64:128]))
+    assert kops._SHARD_CACHE[id(mono)][1] is shl_cached   # no rebuild
+    assert bool(jnp.all(r1.found)) and bool(jnp.all(r2.found))
+    kops._SHARD_CACHE.clear()
