@@ -1,0 +1,167 @@
+"""Skewed-ingest rebalancing benchmark: fixed vs rebalanced shard boundaries.
+
+A Zipf(1.2) insert stream concentrated on one shard's key range (YCSB-style
+hot range) is driven into the same initial ``ShardedSkipList`` twice:
+
+* ``fixed`` — boundaries frozen at build time (PR 1/2 behaviour): the hot
+  shard's fixed capacity exhausts while its neighbours sit half-empty, and
+  new inserts start returning 0 long before total capacity is used.  The
+  *exhaustion point* — cumulative successful NEW inserts before the first
+  capacity failure — is the acceptance metric.
+* ``rebalanced`` — ``apply_ops_sharded(..., rebalance=True)``: the
+  exhaustion guard splits ahead of the hot shard, the watermark pass keeps
+  occupancy level, and the whole stream completes with zero failures,
+  bit-identical to a monolithic index with ample capacity (asserted here).
+
+Also recorded: the DMA cost model (``ops.dma_model_bytes``) for a Zipf
+query batch against both final states — rebalancing grows the shard count,
+so the clustered launch's modeled bytes show what the skew costs/saves at
+the HBM→VMEM tier after the structure adapted.
+
+``python -m benchmarks.fig_rebalance`` writes ``BENCH_rebalance.json``
+next to the repo root as a regression snapshot.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row, zipf_queries
+from repro.core import sharded as shd
+from repro.core import skiplist as sl
+from repro.kernels import ops as kops
+
+N_INIT = 48
+N_SHARDS = 4
+CAPACITY = 16          # usable 14/shard: small on purpose, exhausts quickly
+LEVELS = 8
+BATCH = 32
+N_BATCHES = 6
+SPAN = 1 << 16
+
+_SNAPSHOT = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_rebalance.json")
+
+
+def _stream(keys: np.ndarray):
+    """Zipf(1.2)-ranked inserts folded into shard 0's hot key range."""
+    rng = np.random.default_rng(7)
+    hot_lo = int(keys[2])
+    for _ in range(N_BATCHES):
+        yield (hot_lo + (rng.zipf(1.2, BATCH) - 1) % 4096).astype(np.int32)
+
+
+def _drive(shl, batches, initial: np.ndarray, *, rebalance: bool):
+    """Returns (final_state, successes, failures, exhaustion_point).
+
+    ``seen`` starts at the initial key set: re-inserting a present key is
+    an upsert (result 0) by contract, not a capacity failure.
+    """
+    seen = {int(k) for k in initial}
+    successes = failures = 0
+    exhaustion = None
+    for kk in batches:
+        ops = jnp.full((kk.size,), sl.OP_INSERT, jnp.int32)
+        shl, res = shd.apply_ops_sharded(shl, ops, jnp.asarray(kk),
+                                         jnp.asarray(kk * 2),
+                                         rebalance=rebalance)
+        res = np.asarray(res)
+        for i, k in enumerate(kk):
+            new = int(k) not in seen
+            if new and res[i]:
+                seen.add(int(k))
+                successes += 1
+            elif new and not res[i]:
+                failures += 1
+                if exhaustion is None:
+                    exhaustion = successes
+    return shl, successes, failures, exhaustion
+
+
+def run() -> list:
+    rng = np.random.default_rng(0)
+    keys = np.sort(rng.choice(SPAN, N_INIT, replace=False)).astype(np.int32)
+    shl0 = shd.build_sharded(jnp.asarray(keys), jnp.asarray(keys * 3),
+                             n_shards=N_SHARDS, capacity=CAPACITY,
+                             levels=LEVELS, seed=0)
+    batches = list(_stream(keys))
+
+    shl_f, ok_f, fail_f, exh_f = _drive(shl0, batches, keys, rebalance=False)
+    shl_r, ok_r, fail_r, exh_r = _drive(shl0, batches, keys, rebalance=True)
+    assert fail_f > 0, "stream no longer exhausts the fixed hot shard"
+    assert fail_r == 0, "rebalanced stream must complete without failures"
+
+    # acceptance: the rebalanced state is bit-identical to a monolithic
+    # index (ample capacity) fed the same linearized stream
+    mono = sl.build(jnp.asarray(keys), jnp.asarray(keys * 3),
+                    capacity=1024, levels=LEVELS, seed=0)
+    for kk in batches:
+        ops = jnp.full((kk.size,), sl.OP_INSERT, jnp.int32)
+        mono, _ = sl.apply_ops(mono, ops, jnp.asarray(kk),
+                               jnp.asarray(kk * 2))
+    probe = jnp.asarray(np.concatenate(
+        [keys, np.unique(np.concatenate(batches)),
+         rng.integers(0, SPAN, 64)]).astype(np.int32))
+    f_m, v_m = sl.search_fast(mono, probe)
+    f_s, v_s = shd.search_sharded(shl_r, probe)
+    assert bool(jnp.all(f_s == f_m)) and bool(jnp.all(v_s == v_m)), \
+        "rebalanced index diverged from the monolithic oracle"
+    assert bool(shd.check_sharded_invariant(shl_r, expect_n=int(mono.n)))
+
+    # DMA model for a Zipf query batch against both final structures
+    q = zipf_queries(np.asarray(sorted(
+        set(keys.tolist()) | {int(k) for kk in batches for k in kk}),
+        np.int32), 256)
+    qp, _ = kops._pad(q)
+    model = {}
+    for name, s in (("fixed", shl_f), ("rebalanced", shl_r)):
+        plan = kops.cluster_queries(s.boundaries, qp)
+        model[name] = {
+            "n_shards": s.n_shards,
+            "dense": int(kops.dma_model_bytes(s, 256)),
+            "clustered": int(kops.dma_model_bytes(s, 256, plan.block_sids)),
+        }
+
+    total_new = ok_r                       # rebalanced accepts every new key
+    rows = [
+        csv_row("rebalance/fixed", 0.0,
+                f"exhaustion_point={exh_f};failed_inserts={fail_f};"
+                f"accepted={ok_f}/{total_new}"),
+        csv_row("rebalance/on", 0.0,
+                f"exhaustion_point=none;failed_inserts=0;"
+                f"accepted={ok_r}/{total_new};n_shards={shl_r.n_shards}"),
+        csv_row("rebalance/dma_model", 0.0,
+                f"fixed_clustered_bytes={model['fixed']['clustered']};"
+                f"rebal_clustered_bytes={model['rebalanced']['clustered']}"),
+    ]
+    run.snapshot = {
+        "n_init": N_INIT, "n_shards_initial": N_SHARDS,
+        "shard_capacity": CAPACITY, "batch": BATCH,
+        "n_batches": N_BATCHES, "zipf_a": 1.2,
+        "distinct_new_keys": total_new,
+        "fixed": {"exhaustion_point": exh_f, "accepted": ok_f,
+                  "failed_inserts": fail_f,
+                  "n_shards_final": shl_f.n_shards},
+        "rebalanced": {"exhaustion_point": None, "accepted": ok_r,
+                       "failed_inserts": fail_r,
+                       "n_shards_final": shl_r.n_shards},
+        "dma_model_bytes": model,
+    }
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    for r in rows:
+        print(r)
+    with open(_SNAPSHOT, "w") as f:
+        json.dump(run.snapshot, f, indent=2)
+        f.write("\n")
+    print(f"# snapshot -> {_SNAPSHOT}")
+
+
+if __name__ == "__main__":
+    main()

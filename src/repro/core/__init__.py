@@ -4,10 +4,12 @@ from repro.core.skiplist import (KEY_MAX, KEY_MIN, OP_DELETE, OP_INSERT,
                                  apply_ops, build, check_foresight_invariant,
                                  contains, delete, empty, insert,
                                  sample_heights, search, to_sorted_keys)
-from repro.core.sharded import (ShardedSkipList, apply_ops_sharded,
-                                build_sharded, check_sharded_invariant,
-                                contains_sharded, range_scan_sharded, route,
-                                search_sharded)
+from repro.core.sharded import (RebalanceStats, ShardedSkipList,
+                                apply_ops_sharded, build_sharded,
+                                check_sharded_invariant, contains_sharded,
+                                empty_sharded, merge_shards,
+                                range_scan_sharded, rebalance, repack,
+                                route, search_sharded, split_shard, total_n)
 from repro.core.validated import (PredValidation, search_validated,
                                   validate_preds)
 from repro.core.versioned import IndexView, VersionedIndex
@@ -18,7 +20,8 @@ __all__ = [
     "check_foresight_invariant", "contains", "delete", "empty", "insert",
     "sample_heights", "search", "to_sorted_keys", "search_validated",
     "validate_preds", "PredValidation", "IndexView", "VersionedIndex",
-    "ShardedSkipList", "apply_ops_sharded", "build_sharded",
-    "check_sharded_invariant", "contains_sharded", "range_scan_sharded",
-    "route", "search_sharded",
+    "RebalanceStats", "ShardedSkipList", "apply_ops_sharded",
+    "build_sharded", "check_sharded_invariant", "contains_sharded",
+    "empty_sharded", "merge_shards", "range_scan_sharded", "rebalance",
+    "repack", "route", "search_sharded", "split_shard", "total_n",
 ]

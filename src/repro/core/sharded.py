@@ -30,6 +30,41 @@ the smallest power-of-two ``S`` that brings that under the budget.
 Empty shards (possible when ``n`` is not a multiple of ``S``) hold only the
 two sentinels; their boundary degenerates to ``KEY_MAX`` so routing never
 selects them, and cross-shard range scans walk straight through them.
+
+Rebalancing (split / merge / repack)
+------------------------------------
+Boundaries are no longer frozen at build time.  ``split_shard`` divides one
+shard at a key (default: its median) into two, ``merge_shards`` folds two
+adjacent shards into one, ``repack`` rebuilds every boundary from observed
+occupancy in one pass, and ``rebalance`` is the B-Skiplist-style watermark
+driver over all three.  The rebalancing invariants, preserved by every one
+of these operations (and checkable via ``check_sharded_invariant``):
+
+* ``boundaries`` stays a flat, non-decreasing int32 array with
+  ``boundaries[0] == KEY_MIN`` — so ``route`` / ``cluster_queries`` /
+  ``shard_segments`` work unchanged on any rebalanced state;
+* every live key stays inside its shard's ``[boundaries[s],
+  boundaries[s+1])`` range;
+* the live key/value *contents* are exactly preserved (``total_n`` is
+  conserved; only the partition and the resampled tower heights change),
+  so searches and scans are bit-identical before and after;
+* ``shard_capacity`` and ``levels`` are constant — splits grow total
+  capacity by adding shards, merges shrink it — so per-shard tiles keep
+  fitting the same VMEM budget and ``build``'s compiled trace is reused.
+
+Watermark semantics (fractions of the usable per-shard capacity,
+``shard_capacity - 2``): a shard above ``high_water`` is split at its
+median until none remain; two adjacent shards merge when their combined
+occupancy fits under ``high_water`` and at least one of them sits below
+``low_water``.  ``high_water > 0.5`` is required so a split's halves land
+strictly below the high mark (no split/merge ping-pong).
+
+Rebalancing concretizes occupancy on the host, so it runs eagerly only:
+``apply_ops_sharded(..., rebalance=True)`` guards capacity *before*
+applying (splitting ahead of any shard the routed inserts would exhaust —
+linearization is untouched because contents never change) and re-levels
+watermarks after; under ``jit`` tracing the knob degrades to the fixed-
+boundary behaviour (see ROADMAP for the traced-rebalance follow-up).
 """
 from __future__ import annotations
 
@@ -38,10 +73,12 @@ from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
-from repro.core.skiplist import (HEAD, KEY_MAX, KEY_MIN, NULL_VAL, OP_READ,
-                                 SkipListState, apply_ops, build,
+from repro.core.skiplist import (HEAD, KEY_MAX, KEY_MIN, NULL_VAL,
+                                 OP_INSERT, OP_READ, SkipListState,
+                                 apply_ops, build,
                                  check_foresight_invariant,
                                  effective_top_level)
 
@@ -127,6 +164,21 @@ def build_sharded(keys: jax.Array, vals: jax.Array, *, n_shards: int,
     boundaries = keys[::m]                        # first key of each shard
     boundaries = boundaries.at[0].set(KEY_MIN)    # shard 0 owns (-inf, b1)
     return ShardedSkipList(shards=stacked, boundaries=boundaries)
+
+
+def empty_sharded(*, n_shards: int, capacity: int, levels: int = 16,
+                  foresight: bool = True, seed: int = 0) -> ShardedSkipList:
+    """An empty partitioned index (each shard holds only the sentinels).
+
+    All but shard 0's boundary degenerate to ``KEY_MAX``, so every insert
+    initially routes to shard 0; with ``apply_ops_sharded(...,
+    rebalance=True)`` splits then carve out real boundaries as it fills —
+    the growth path for callers that start from nothing (e.g. the paged
+    KV page table).
+    """
+    z = jnp.zeros((0,), jnp.int32)
+    return build_sharded(z, z, n_shards=n_shards, capacity=capacity,
+                         levels=levels, foresight=foresight, seed=seed)
 
 
 # ---------------------------------------------------------------------------
@@ -251,6 +303,257 @@ def range_scan_sharded(shl: ShardedSkipList, lo: jax.Array, hi: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Rebalancing: shard split / merge, watermark driver, one-pass repack
+# ---------------------------------------------------------------------------
+
+HIGH_WATER = 0.75       # split a shard above this fraction of usable capacity
+LOW_WATER = 0.25        # merge-eligible below this fraction
+MAX_SHARDS = 1024       # hard ceiling on split growth
+
+
+class RebalanceStats(NamedTuple):
+    splits: int
+    merges: int
+
+
+def _shard_sorted_kv(shard: SkipListState) -> Tuple[jax.Array, jax.Array]:
+    """One shard's live (key, val) pairs in key order, padded to cap - 2.
+
+    Unused, deleted, and tail slots all hold ``KEY_MAX`` and the head
+    ``KEY_MIN``, so a single argsort recovers the live prefix (positions
+    ``1 .. n``); the suffix past ``shard.n`` is padding.
+    """
+    cap = shard.capacity
+    order = jnp.argsort(shard.keys)
+    return shard.keys[order][1:cap - 1], shard.vals[order][1:cap - 1]
+
+
+def _set_shard_slice(shl: ShardedSkipList, s: int, width: int,
+                     replacement: SkipListState, boundaries: jax.Array
+                     ) -> ShardedSkipList:
+    """Splice ``replacement`` (leading axis = new shard(s)) over shards
+    ``[s, s + width)`` of the stacked pytree."""
+    new_shards = jax.tree.map(
+        lambda full, ins: jnp.concatenate([full[:s], ins, full[s + width:]],
+                                          axis=0),
+        shl.shards, replacement)
+    return ShardedSkipList(shards=new_shards, boundaries=boundaries)
+
+
+def split_shard(shl: ShardedSkipList, s: int,
+                at_key: Optional[int] = None, *, seed: int = 0
+                ) -> ShardedSkipList:
+    """Split shard ``s`` into two at ``at_key`` (default: its median key).
+
+    The left shard keeps keys ``< at_key``, the right keys ``>= at_key``;
+    ``at_key`` becomes the right shard's boundary, so it must fall strictly
+    inside shard ``s``'s current key range.  Contents are preserved exactly
+    (both halves are re-bulk-built at the shared static capacity); only
+    tower heights are resampled.  Host-side eager only: occupancy must
+    concretize.
+    """
+    s = int(s)
+    S = shl.n_shards
+    assert 0 <= s < S
+    cap, L, fs = shl.shard_capacity, shl.levels, shl.foresight
+    shard = jax.tree.map(lambda a: a[s], shl.shards)
+    ks, vs = _shard_sorted_kv(shard)
+    n = int(shard.n)
+    ks_np = np.asarray(ks)
+    if at_key is None:
+        if n < 2:
+            raise ValueError("cannot median-split a shard with < 2 keys; "
+                             "pass an explicit at_key")
+        at_key = int(ks_np[n // 2])
+    at_key = int(at_key)
+    b_np = np.asarray(shl.boundaries)
+    hi = int(b_np[s + 1]) if s + 1 < S else int(KEY_MAX)
+    if not int(b_np[s]) < at_key < hi:
+        raise ValueError(f"at_key={at_key} outside shard {s}'s open range "
+                         f"({int(b_np[s])}, {hi})")
+    n_left = int((ks_np[:n] < at_key).sum())
+    idx = jnp.arange(cap - 2)
+    left = build(ks, vs, capacity=cap, levels=L, foresight=fs, seed=seed,
+                 valid=idx < n_left)
+    right = build(jnp.roll(ks, -n_left), jnp.roll(vs, -n_left), capacity=cap,
+                  levels=L, foresight=fs, seed=seed + 1,
+                  valid=idx < n - n_left)
+    pair = jax.tree.map(lambda a, b: jnp.stack([a, b]), left, right)
+    boundaries = jnp.concatenate([shl.boundaries[:s + 1],
+                                  jnp.asarray([at_key], jnp.int32),
+                                  shl.boundaries[s + 1:]])
+    return _set_shard_slice(shl, s, 1, pair, boundaries)
+
+
+def merge_shards(shl: ShardedSkipList, s: int, *, seed: int = 0
+                 ) -> ShardedSkipList:
+    """Merge adjacent shards ``s`` and ``s + 1`` into one.
+
+    Their combined live count must fit the shared static capacity
+    (``n_a + n_b + 2 <= shard_capacity``); key ranges are adjacent and
+    disjoint, so concatenating the two sorted live runs is already sorted.
+    Host-side eager only.
+    """
+    s = int(s)
+    S = shl.n_shards
+    assert 0 <= s < S - 1, "merge needs a right-hand neighbour"
+    cap, L, fs = shl.shard_capacity, shl.levels, shl.foresight
+    a = jax.tree.map(lambda x: x[s], shl.shards)
+    b = jax.tree.map(lambda x: x[s + 1], shl.shards)
+    ka, va = _shard_sorted_kv(a)
+    kb, vb = _shard_sorted_kv(b)
+    na, nb = int(a.n), int(b.n)
+    if na + nb + 2 > cap:
+        raise ValueError(f"merged occupancy {na}+{nb} exceeds shard "
+                         f"capacity {cap} - 2")
+    pad = cap - 2 - na - nb
+    ks = jnp.concatenate([ka[:na], kb[:nb],
+                          jnp.full((pad,), KEY_MAX, jnp.int32)])
+    vs = jnp.concatenate([va[:na], vb[:nb],
+                          jnp.full((pad,), NULL_VAL, jnp.int32)])
+    merged = build(ks, vs, capacity=cap, levels=L, foresight=fs, seed=seed,
+                   valid=jnp.arange(cap - 2) < na + nb)
+    one = jax.tree.map(lambda x: x[None], merged)
+    boundaries = jnp.concatenate([shl.boundaries[:s + 1],
+                                  shl.boundaries[s + 2:]])
+    return _set_shard_slice(shl, s, 2, one, boundaries)
+
+
+def repack(shl: ShardedSkipList, n_shards: int = 0, *, seed: int = 0
+           ) -> ShardedSkipList:
+    """Rebuild every boundary from observed occupancy in ONE pass.
+
+    Gathers all live keys in global sorted order (one argsort over the
+    stacked key arrays — the ``S`` head sentinels sort first, dead slots
+    last) and re-partitions them evenly into ``n_shards`` (default: keep
+    the current count) at the same static per-shard capacity.  This is the
+    amortized counterpart of incremental split/merge: after heavy skew it
+    equalizes occupancy to within one key across shards.  Host-side eager
+    only.
+    """
+    S = shl.n_shards
+    S2 = int(n_shards) or S
+    cap, L, fs = shl.shard_capacity, shl.levels, shl.foresight
+    nn = int(total_n(shl))
+    if -(-max(1, nn) // S2) + 2 > cap:
+        raise ValueError(f"{nn} keys over {S2} shards exceed per-shard "
+                         f"capacity {cap}")
+    order = jnp.argsort(shl.shards.keys.reshape(-1))
+    ks = shl.shards.keys.reshape(-1)[order][S:S + nn]
+    vs = shl.shards.vals.reshape(-1)[order][S:S + nn]
+    return build_sharded(ks, vs, n_shards=S2, capacity=cap, levels=L,
+                         foresight=fs, seed=seed)
+
+
+def _watermark_rebalance(shl: ShardedSkipList, *, high_water: float,
+                         low_water: float, max_shards: int, seed: int = 0
+                         ) -> Tuple[ShardedSkipList, RebalanceStats]:
+    """Split every shard above ``high_water``, then merge underfull
+    neighbours.  See the module docstring for the watermark semantics and
+    the termination argument (``high_water > 0.5`` keeps split halves
+    below the high mark; merges only form shards below it)."""
+    if not 0.5 < high_water <= 1.0:     # public kwarg: survive python -O
+        raise ValueError(f"high_water={high_water} must be in (0.5, 1.0] "
+                         "(split halves must land below the high mark)")
+    if not 0.0 < low_water < high_water:
+        raise ValueError(f"low_water={low_water} must be in "
+                         f"(0, high_water={high_water})")
+    usable = shl.shard_capacity - 2
+    splits = merges = 0
+    while shl.n_shards < max_shards:
+        ns = np.asarray(shl.shards.n)
+        over = np.flatnonzero(ns > high_water * usable)
+        if over.size == 0:
+            break
+        s = int(over[np.argmax(ns[over])])
+        if ns[s] < 2:
+            break
+        shl = split_shard(shl, s, seed=seed + splits)
+        splits += 1
+    while shl.n_shards > 1:
+        ns = np.asarray(shl.shards.n)
+        comb = ns[:-1] + ns[1:]
+        ok = (comb <= high_water * usable) & \
+             ((ns[:-1] < low_water * usable) | (ns[1:] < low_water * usable))
+        cand = np.flatnonzero(ok)
+        if cand.size == 0:
+            break
+        s = int(cand[np.argmin(comb[cand])])
+        shl = merge_shards(shl, s, seed=seed + merges)
+        merges += 1
+    return shl, RebalanceStats(splits, merges)
+
+
+def rebalance(shl: ShardedSkipList, *, high_water: float = HIGH_WATER,
+              low_water: float = LOW_WATER, max_shards: int = MAX_SHARDS,
+              seed: int = 0) -> Tuple[ShardedSkipList, RebalanceStats]:
+    """Watermark-driven split/merge pass; returns (new_state, stats).
+
+    Contents are exactly preserved; only the partition changes.  Callers
+    treat the index functionally, so the returned ``ShardedSkipList``
+    simply replaces the old one (any cached launch plan built against the
+    OLD boundaries — e.g. a ``ClusterPlan`` — is stale and must be
+    rebuilt; ``kernels.ops.search_kernel_sharded`` replans per call).
+    """
+    return _watermark_rebalance(shl, high_water=high_water,
+                                low_water=low_water, max_shards=max_shards,
+                                seed=seed)
+
+
+def _exhaustion_guard(shl: ShardedSkipList, op_types: jax.Array,
+                      keys: jax.Array, *, max_shards: int, seed: int = 0
+                      ) -> Tuple[ShardedSkipList, int]:
+    """Split ahead of any shard the routed inserts of this batch would
+    exhaust, so no insert fails on shard capacity that a rebalance could
+    have provided.
+
+    Projects per-shard occupancy as ``n_s + (# distinct NEW keys routed to
+    s)`` — exact, because upserts of present keys do not grow ``n`` — and
+    splits the worst offender at the median of its combined (live +
+    incoming) key multiset until every projection fits or the keys are
+    indivisible (then the normal signalled-failure contract applies).
+    Contents never change, so linearization of the following apply is
+    untouched.
+    """
+    usable = shl.shard_capacity - 2
+    ins = np.asarray(op_types) == OP_INSERT
+    if not ins.any():
+        return shl, 0
+    ins_keys = np.unique(np.asarray(keys)[ins]).astype(np.int32)
+    # conservative projection first — every insert counted as new; only if
+    # some shard could exceed does the exact (presence-filtered) pass pay
+    # for a whole-index search to discount upserts
+    sid0 = np.asarray(route(shl.boundaries, jnp.asarray(ins_keys)))
+    ns0 = np.asarray(shl.shards.n)
+    bound = ns0 + np.bincount(sid0, minlength=shl.n_shards)[:ns0.size]
+    if not (bound > usable).any():
+        return shl, 0
+    present = np.asarray(search_sharded(shl, jnp.asarray(ins_keys))[0])
+    new_keys = ins_keys[~present]
+    splits = 0
+    while new_keys.size and shl.n_shards < max_shards:
+        sid = np.asarray(route(shl.boundaries, jnp.asarray(new_keys)))
+        ns = np.asarray(shl.shards.n)
+        proj = ns + np.bincount(sid, minlength=shl.n_shards)[:ns.size]
+        over = np.flatnonzero(proj > usable)
+        if over.size == 0:
+            break
+        s = int(over[np.argmax(proj[over])])
+        shard = jax.tree.map(lambda a: a[s], shl.shards)
+        live = np.asarray(_shard_sorted_kv(shard)[0])[:int(shard.n)]
+        combined = np.sort(np.concatenate([live, new_keys[sid == s]]))
+        at = int(combined[combined.size // 2])
+        if at == int(combined[0]):                 # median won't separate
+            bigger = combined[combined > combined[0]]
+            if bigger.size == 0:                   # indivisible key mass
+                break
+            at = int(bigger[0])
+        shl = split_shard(shl, s, at_key=at, seed=seed + splits)
+        splits += 1
+    return shl, splits
+
+
+# ---------------------------------------------------------------------------
 # Routed batched updates (the functional concurrency model, per shard)
 # ---------------------------------------------------------------------------
 
@@ -268,7 +571,11 @@ def shard_segments(sid_sorted: jax.Array, n_shards: int
 
 
 def apply_ops_sharded(shl: ShardedSkipList, op_types: jax.Array,
-                      keys: jax.Array, vals: jax.Array
+                      keys: jax.Array, vals: jax.Array, *,
+                      rebalance: bool = False,
+                      high_water: float = HIGH_WATER,
+                      low_water: float = LOW_WATER,
+                      max_shards: int = MAX_SHARDS
                       ) -> Tuple[ShardedSkipList, jax.Array]:
     """Apply a linearized mixed-op batch, routed per shard.
 
@@ -290,12 +597,28 @@ def apply_ops_sharded(shl: ShardedSkipList, op_types: jax.Array,
     Capacity caveat: each shard has a FIXED capacity, so a key-skewed insert
     stream can exhaust one shard while others have room — those inserts
     return 0 (the same signalled-failure contract as monolithic capacity
-    exhaustion, but reached earlier under skew).  Check the result flags;
-    shard split/rebalance is a ROADMAP item.
+    exhaustion, but reached earlier under skew).  ``rebalance=True`` removes
+    that early failure: a pre-pass splits ahead of any shard this batch's
+    routed inserts would exhaust (``_exhaustion_guard``; contents are
+    untouched, so linearization and results stay bit-identical to the
+    monolithic ``apply_ops`` given sufficient total capacity), and a post-
+    pass re-levels the watermarks (splitting overfull shards, merging
+    underfull neighbours) for the batches to come.  Both passes concretize
+    occupancy on the host, so under ``jit`` tracing the knob silently
+    degrades to the fixed-boundary behaviour (dense fallback included).
     """
     op_types = op_types.astype(jnp.int32)
     keys = keys.astype(jnp.int32)
     vals = vals.astype(jnp.int32)
+    if rebalance:
+        try:
+            shl, _ = _exhaustion_guard(shl, op_types, keys,
+                                       max_shards=max_shards)
+        except jax.errors.JAXTypeError:
+            # traced: host-side passes unavailable.  JAXTypeError covers
+            # both ConcretizationTypeError (int()) and its sibling
+            # TracerArrayConversionError (np.asarray() on a tracer)
+            rebalance = False
     S = shl.n_shards
     B = keys.shape[0]
     sid = route(shl.boundaries, keys)
@@ -308,6 +631,10 @@ def apply_ops_sharded(shl: ShardedSkipList, op_types: jax.Array,
         return _apply_ops_sharded_dense(shl, op_types, keys, vals, sid)
     if W == 0:
         return shl, jnp.zeros((B,), jnp.int32)
+    # round the window up to a power of two (clamped to B): positions past a
+    # segment's length are masked to no-op reads anyway, and this bounds the
+    # distinct (S, W) traces of the vmapped scan to log2(B) variants
+    W = min(B, 1 << (W - 1).bit_length())
     # pad the sorted batch by W no-op reads so windows never clamp
     ops_p = jnp.concatenate([op_types[perm],
                              jnp.full((W,), OP_READ, jnp.int32)])
@@ -326,7 +653,12 @@ def apply_ops_sharded(shl: ShardedSkipList, op_types: jax.Array,
     pos = jnp.arange(B)
     res_sorted = res_w[sid_s, pos - starts[sid_s]]
     results = res_sorted[jnp.argsort(perm)]
-    return shl._replace(shards=new_shards), results
+    out = shl._replace(shards=new_shards)
+    if rebalance:
+        out, _ = _watermark_rebalance(out, high_water=high_water,
+                                      low_water=low_water,
+                                      max_shards=max_shards)
+    return out, results
 
 
 def _apply_ops_sharded_dense(shl: ShardedSkipList, op_types: jax.Array,
@@ -351,22 +683,35 @@ def _apply_ops_sharded_dense(shl: ShardedSkipList, op_types: jax.Array,
 # Invariants / introspection
 # ---------------------------------------------------------------------------
 
-def check_sharded_invariant(shl: ShardedSkipList) -> jax.Array:
-    """Foresight invariant on every shard + boundary containment."""
+def check_sharded_invariant(shl: ShardedSkipList,
+                            expect_n=None) -> jax.Array:
+    """Foresight invariant on every shard + the partition invariants.
+
+    Checks, in order: per-shard foresight records, boundary sortedness
+    (non-decreasing with ``boundaries[0] == KEY_MIN`` — the rebalancing
+    operations must never produce an unsorted routing array), per-shard
+    key-range containment, and — when ``expect_n`` is given — conservation
+    of the total live count (split/merge/repack move keys, never drop or
+    duplicate them).
+    """
     ok = jnp.bool_(True)
     if shl.foresight:
         ok = jnp.all(jax.vmap(check_foresight_invariant)(shl.shards))
+    # boundaries stay a flat sorted routing array pinned at KEY_MIN
+    b = shl.boundaries
+    ok = ok & (b[0] == KEY_MIN) & jnp.all(b[1:] >= b[:-1])
     # every live key sits inside its shard's [boundaries[s], boundaries[s+1])
-    S = shl.n_shards
-    cap = shl.shard_capacity
     keys = shl.shards.keys                                  # [S, cap]
     live = (keys != KEY_MAX) & (keys != KEY_MIN)
-    lo_b = shl.boundaries[:, None]
-    hi_b = jnp.concatenate([shl.boundaries[1:],
+    lo_b = b[:, None]
+    hi_b = jnp.concatenate([b[1:],
                             jnp.full((1,), KEY_MAX, jnp.int32)])[:, None]
     # degenerate (empty-shard) boundaries hold KEY_MAX; live keys never do
     in_range = jnp.where(live, (keys >= lo_b) & (keys < hi_b), True)
-    return ok & jnp.all(in_range)
+    ok = ok & jnp.all(in_range)
+    if expect_n is not None:
+        ok = ok & (total_n(shl) == jnp.asarray(expect_n, jnp.int32))
+    return ok
 
 
 def total_n(shl: ShardedSkipList) -> jax.Array:

@@ -187,12 +187,15 @@ def build(keys: jax.Array, vals: jax.Array, *, capacity: int,
         nxt = nxt.at[:, HEAD].set(head_id)
         fused = None
 
-    # Padded (invalid) slots keep their bump-allocated ids but stay unlinked;
-    # bump therefore still advances past them (capacity is sized with slack).
+    # Padded (invalid) slots are bit-identical to never-used ones (KEY_MAX
+    # key, zero height, unlinked), so the bump allocator stops at the live
+    # prefix and reuses the padding as free capacity — essential for shards
+    # re-bulk-built from full-width padded arrays (sharded.split_shard /
+    # merge_shards), whose padding IS their entire insert headroom.
+    n_live = jnp.sum(valid).astype(jnp.int32)
     return st._replace(keys=new_keys, vals=new_vals, height=new_height,
-                       nxt=nxt, fused=fused,
-                       n=jnp.sum(valid).astype(jnp.int32),
-                       bump=jnp.int32(n + 2), rng=rng)
+                       nxt=nxt, fused=fused, n=n_live,
+                       bump=n_live + jnp.int32(2), rng=rng)
 
 
 # ---------------------------------------------------------------------------

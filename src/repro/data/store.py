@@ -15,9 +15,13 @@ auto-selects — monolithic unless the kernel path is in use AND the table
 exceeds ``VMEM_BUDGET_BYTES`` (the budget only binds kernels), in which
 case the smallest power-of-two shard count whose per-shard tile fits.
 All lookups, scans, and updates route host-free through the flat boundary
-array; callers never see the partitioning — with one caveat: shard capacity
-is fixed, so a key-skewed ingest stream can fill one shard early (those
-inserts report 0 in the result flags; see ``sharded.apply_ops_sharded``).
+array; callers never see the partitioning.  With ``rebalance`` on (the
+default) a key-skewed ingest stream can no longer fill one shard early:
+``apply_ops_sharded`` splits ahead of any shard a batch would exhaust and
+re-levels watermarks after (``core.sharded``), and every ``repack_every``
+update batches the store amortizes an occupancy-equalizing ``repack``.
+With it off, the fixed-capacity caveat applies (failed inserts report 0 in
+the result flags).
 """
 from __future__ import annotations
 
@@ -45,6 +49,9 @@ class StoreConfig:
     clustered: bool = True   # shard-sort query batches -> DMA only routed
                              # tiles (kernels/ops.cluster_queries); False
                              # keeps the dense (B//QBLK, S) launch
+    rebalance: bool = True   # sharded only: split/merge around skewed ingest
+    repack_every: int = 0    # update batches between amortized repacks
+                             # (0 = never; sharded + rebalance only)
     seed: int = 0
 
 
@@ -77,6 +84,7 @@ class IndexedSampleStore:
             self.n_shards = kops.auto_shards(
                 cfg.n_samples, cfg.index_levels,
                 cfg.foresight) if needs_shards else 1
+        self._updates_since_repack = 0
         row_ids = jnp.arange(cfg.n_samples, dtype=jnp.int32)  # value = row id
         if self.n_shards > 1:
             self.index = shd.build_sharded(
@@ -125,8 +133,14 @@ class IndexedSampleStore:
     def _apply(self, ops: jax.Array, keys: jax.Array, vals: jax.Array
                ) -> jax.Array:
         if self.sharded:
-            self.index, results = shd.apply_ops_sharded(self.index, ops,
-                                                        keys, vals)
+            self.index, results = shd.apply_ops_sharded(
+                self.index, ops, keys, vals,
+                rebalance=self.cfg.rebalance)
+            self._updates_since_repack += 1
+            if (self.cfg.rebalance and self.cfg.repack_every and
+                    self._updates_since_repack >= self.cfg.repack_every):
+                self.index = shd.repack(self.index, seed=self.cfg.seed)
+                self._updates_since_repack = 0
         else:
             self.index, results = sl.apply_ops(self.index, ops, keys, vals)
         return results

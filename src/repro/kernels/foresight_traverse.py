@@ -50,6 +50,18 @@ must grow toward S only when single blocks straddle many shards (uniform
 routing at small batch), where the clustered grid degenerates to the dense
 one and nothing is lost but the argsort.
 
+Rebalancing (``core.sharded.split_shard`` / ``merge_shards`` / ``repack``)
+changes the shard count S between launches.  Every wrapper therefore
+re-derives its grid, K, and ``traversal_bound`` from the shapes of the
+state it is handed on THAT call — S from the stacked table's leading axis,
+the step ceiling from ``levels``/``capacity`` — never from constants baked
+at first launch.  A ``ClusterPlan`` is only valid against the boundary
+array it was built from; the clustered wrappers statically reject a plan
+whose K exceeds the current S (the cheap detectable half of staleness —
+``ops.search_kernel_sharded`` replans per call so callers never hold one
+across a rebalance).  Each distinct S compiles its own kernel; splits move
+S by ±1, so a rebalance burst costs a handful of (small) retraces.
+
 Kernels are validated in ``interpret=True`` mode on CPU (bit-exact against
 ``ref.py``); block shapes keep the minor dimension at 128 lanes and the
 fused pair in the minor-most axis so a real-TPU lowering fetches both halves
@@ -429,6 +441,9 @@ def foresight_traverse_clustered(fused: jax.Array, block_sids: jax.Array,
     B = queries.shape[0]
     nblk, K = block_sids.shape
     assert B == nblk * QBLK, "queries must be padded to block_sids' blocks"
+    assert K <= S, (f"ClusterPlan with K={K} > S={S}: plan built against a "
+                    "different shard count (stale after a rebalance?) — "
+                    "rebuild it from the current boundaries")
     if max_steps == 0:
         max_steps = traversal_bound(L, cap)
     kernel = functools.partial(_foresight_clustered_kernel, levels=L,
@@ -470,6 +485,9 @@ def base_traverse_clustered(nxt: jax.Array, keys: jax.Array,
     B = queries.shape[0]
     nblk, K = block_sids.shape
     assert B == nblk * QBLK, "queries must be padded to block_sids' blocks"
+    assert K <= S, (f"ClusterPlan with K={K} > S={S}: plan built against a "
+                    "different shard count (stale after a rebalance?) — "
+                    "rebuild it from the current boundaries")
     if max_steps == 0:
         max_steps = traversal_bound(L, cap)
     kernel = functools.partial(_base_clustered_kernel, levels=L, cap=cap,

@@ -14,13 +14,17 @@ temporaries.  The single-tile kernels pin the whole table per grid step:
 * base:      ``levels * capacity * 4 + capacity * 4`` bytes (nxt + keys),
 
 so e.g. ``levels=16, capacity=2**18`` fused is 32 MiB — past the budget.
-``search_kernel`` then transparently switches to the sharded path: the key
-space is partitioned into ``S`` contiguous range shards (smallest power of
-two whose per-shard tile fits, see ``auto_shards``), queries are routed
-host-free via ``jnp.searchsorted`` on the shard boundaries, and one
-``pallas_call`` streams the per-shard tiles through VMEM (``core.sharded``
-holds the data structure, the sharded kernels live in
-``foresight_traverse.py``).
+Past it, callers hold a ``ShardedSkipList``: the key space is partitioned
+into ``S`` contiguous range shards (smallest power of two whose per-shard
+tile fits, see ``auto_shards``; ``shard_state`` converts a monolithic
+state once), queries are routed host-free via ``jnp.searchsorted`` on the
+shard boundaries, and one ``pallas_call`` streams the per-shard tiles
+through VMEM (``core.sharded`` holds the data structure — including the
+split/merge rebalancing that moves boundaries at runtime — and the
+sharded kernels live in ``foresight_traverse.py``).  ``search_kernel`` on
+an over-budget *monolithic* state raises: the old transparent auto-
+reshard cached conversions by state identity, which both rebuilt per
+updated state and went stale the moment a rebalance moved boundaries.
 
 Query clustering (the scalar-prefetch launch)
 ---------------------------------------------
@@ -48,8 +52,6 @@ and the only overhead left is the argsort.
 from __future__ import annotations
 
 import functools
-import warnings
-from collections import OrderedDict
 from typing import NamedTuple, Tuple, Union
 
 import jax
@@ -252,6 +254,12 @@ def search_kernel_sharded(shl: ShardedSkipList, queries: jax.Array, *,
     back to the dense launch — correct, traceable, just without the DMA
     saving (same contract as ``apply_ops_sharded``'s fallback).
     """
+    if not fits_vmem(shl):
+        raise ValueError(
+            "search_kernel_sharded: per-shard tile exceeds the VMEM budget "
+            f"({vmem_footprint(shl)} > {VMEM_BUDGET_BYTES} bytes); build "
+            "with more shards (auto_shards picks the smallest fitting "
+            "count) or repack(shl, n_shards=...) the existing index")
     q, B = _pad(queries.astype(jnp.int32))
     if cluster:
         try:
@@ -290,54 +298,30 @@ def search_kernel_sharded(shl: ShardedSkipList, queries: jax.Array, *,
     return KernelSearchResult(found, vals, gnode)
 
 
-# Oversized-monolith conversions, keyed on object identity.  The strong
-# reference to the source state both validates the id key (no reuse while
-# the entry lives) and keeps the conversion warm across repeated calls;
-# the LRU bound caps the retained memory at a handful of index pairs.
-_SHARD_CACHE: "OrderedDict[int, Tuple[SkipListState, ShardedSkipList]]" = \
-    OrderedDict()
-_SHARD_CACHE_MAX = 4
-
-
-def _shard_cached(state: SkipListState) -> ShardedSkipList:
-    ent = _SHARD_CACHE.get(id(state))
-    if ent is not None and ent[0] is state:
-        _SHARD_CACHE.move_to_end(id(state))
-        return ent[1]
-    n = state.capacity - 2                         # static upper bound on n
-    shl = shard_state(state, auto_shards(n, state.levels, state.foresight))
-    _SHARD_CACHE[id(state)] = (state, shl)
-    while len(_SHARD_CACHE) > _SHARD_CACHE_MAX:
-        _SHARD_CACHE.popitem(last=False)
-    return shl
-
-
 def search_kernel(state: Union[SkipListState, ShardedSkipList],
                   queries: jax.Array, *, max_steps: int = 0,
                   interpret: bool = True,
                   cluster: bool = True) -> KernelSearchResult:
     """Kernel-backed batched search on either variant; resolves found/vals.
 
-    Auto-dispatch: a ``ShardedSkipList`` (or a monolithic state whose table
-    exceeds the VMEM budget) takes the sharded key-space path; small
-    monolithic states take the single-tile kernel.  The oversized-monolith
-    branch converts via an identity-keyed cache (``_shard_cached``), so
-    repeated searches on the SAME state object pay the rebuild once — but
-    every new state (e.g. after an update) rebuilds; that path is
-    deprecated in favor of holding a ``ShardedSkipList`` directly.
+    Auto-dispatch: a ``ShardedSkipList`` takes the sharded key-space path;
+    a monolithic state takes the single-tile kernel and must fit the VMEM
+    budget.  The historical oversized-monolith auto-reshard (an identity-
+    keyed conversion cache plus a ``DeprecationWarning``) is gone: it
+    rebuilt the whole partition on every new state object, and rebalancing
+    now changes boundaries underneath any such cache — callers hold a
+    ``ShardedSkipList`` directly instead (``shard_state`` converts once;
+    ``core.sharded.build_sharded`` builds one from scratch).
     """
     if isinstance(state, ShardedSkipList):
         return search_kernel_sharded(state, queries, max_steps=max_steps,
                                      interpret=interpret, cluster=cluster)
     if not fits_vmem(state):
-        warnings.warn(
-            "search_kernel on an over-VMEM monolithic state re-shards "
-            "per state object (cached by identity); build a "
-            "ShardedSkipList once instead — this path is deprecated",
-            DeprecationWarning, stacklevel=2)
-        return search_kernel_sharded(_shard_cached(state), queries,
-                                     max_steps=max_steps,
-                                     interpret=interpret, cluster=cluster)
+        raise ValueError(
+            "search_kernel: monolithic table exceeds the VMEM budget "
+            f"({vmem_footprint(state)} > {VMEM_BUDGET_BYTES} bytes); hold a "
+            "ShardedSkipList instead (kernels.ops.shard_state converts a "
+            "monolithic state once; core.sharded.build_sharded builds one)")
     q, B = _pad(queries.astype(jnp.int32))
     if state.foresight:
         node, ckey = foresight_traverse(state.fused, q, max_steps=max_steps,

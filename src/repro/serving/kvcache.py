@@ -8,16 +8,24 @@ of eviction (range-delete a sequence's pages) is exactly the skiplist
 read/update workload the paper accelerates.  Lookups are batched foresight
 traversals; the variant (base / foresight / kernel) is selectable so the
 macrobenchmark can compare them under a realistic serving key distribution.
+
+The table is a ``core.sharded.ShardedSkipList`` held directly (the old
+oversized-monolith auto-reshard in ``kernels.ops.search_kernel`` is gone):
+it starts as ``n_shards`` empty key-range shards and, with ``rebalance``
+on, ``apply_ops_sharded`` splits/merges shards as sequences come and go —
+a seq-id-skewed allocation burst can no longer exhaust one shard's fixed
+capacity while its neighbours sit empty.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import sharded as shd
 from repro.core import skiplist as sl
 from repro.kernels import ops as kops
 
@@ -36,18 +44,38 @@ class PagedCacheConfig:
     levels: int = 16
     foresight: bool = True
     use_kernel: bool = False
+    n_shards: int = 1            # initial count; rebalancing may change it
+    rebalance: bool = True       # split/merge shards as the table evolves
     seed: int = 0
 
 
 class PageTable:
-    """Ordered (seq, block) -> physical page index, skiplist-backed."""
+    """Ordered (seq, block) -> physical page index, sharded-skiplist-backed."""
+
+    index: shd.ShardedSkipList
 
     def __init__(self, cfg: PagedCacheConfig):
         self.cfg = cfg
-        cap = int(2 ** np.ceil(np.log2(cfg.n_pages * 2 + 4)))
-        self.index = sl.empty(cap, cfg.levels, foresight=cfg.foresight,
-                              seed=cfg.seed)
+        n_shards = cfg.n_shards
+        if cfg.use_kernel:
+            # the kernel path pins one shard tile in VMEM per grid step;
+            # size the partition so a full table ships fitting tiles
+            n_shards = max(n_shards, kops.auto_shards(
+                cfg.n_pages, cfg.levels, cfg.foresight))
+        if n_shards > 1:
+            cap = shd.shard_capacity_for(cfg.n_pages, n_shards)
+        else:
+            cap = int(2 ** np.ceil(np.log2(cfg.n_pages * 2 + 4)))
+        self.index = shd.empty_sharded(
+            n_shards=n_shards, capacity=cap, levels=cfg.levels,
+            foresight=cfg.foresight, seed=cfg.seed)
         self.free = list(range(cfg.n_pages - 1, -1, -1))
+
+    def _apply(self, ops: jax.Array, keys: jax.Array, vals: jax.Array
+               ) -> jax.Array:
+        self.index, results = shd.apply_ops_sharded(
+            self.index, ops, keys, vals, rebalance=self.cfg.rebalance)
+        return results
 
     # -- allocation -----------------------------------------------------------
 
@@ -61,8 +89,24 @@ class PageTable:
         keys = page_key(seq_ids.astype(np.int64),
                         block_ids.astype(np.int64)).astype(np.int32)
         ops = jnp.full((n,), sl.OP_INSERT, jnp.int32)
-        self.index, _ = sl.apply_ops(self.index, ops,
-                                     jnp.asarray(keys), jnp.asarray(pages))
+        res = np.asarray(self._apply(ops, jnp.asarray(keys),
+                                     jnp.asarray(pages)))
+        if not res.all():
+            # result 0 is either an upsert of an already-mapped block
+            # (mapping updated in place; pre-existing contract) or a
+            # capacity-failed insert (mapping LOST) — only the latter leaks
+            # pages, so it must not pass silently: reclaim and raise.
+            failed = res == 0
+            still_absent = ~np.asarray(
+                shd.search_sharded(self.index, jnp.asarray(keys[failed]))[0])
+            if still_absent.any():
+                lost = np.flatnonzero(failed)[still_absent]
+                for p in pages[lost]:
+                    self.free.append(int(p))
+                raise RuntimeError(
+                    f"page-table insert failed for {lost.size} block(s): "
+                    "shard capacity exhausted (rebalance off or shards "
+                    "indivisible); their pages were returned to the pool")
         return pages
 
     def lookup(self, seq_ids: np.ndarray, block_ids: np.ndarray
@@ -74,7 +118,7 @@ class PageTable:
         if self.cfg.use_kernel:
             r = kops.search_kernel(self.index, keys)
             return r.found, r.vals
-        return sl.search_fast(self.index, keys)   # preds-free read path
+        return shd.search_sharded(self.index, keys)
 
     def release(self, seq_id: int, n_blocks: int) -> int:
         """Free all pages of a finished sequence (ordered range delete)."""
@@ -82,8 +126,7 @@ class PageTable:
         keys = page_key(np.int64(seq_id), blocks).astype(np.int32)
         found, pages = self.lookup(np.full(n_blocks, seq_id), blocks)
         ops = jnp.full((n_blocks,), sl.OP_DELETE, jnp.int32)
-        self.index, results = sl.apply_ops(
-            self.index, ops, jnp.asarray(keys), jnp.zeros(n_blocks, jnp.int32))
+        self._apply(ops, jnp.asarray(keys), jnp.zeros(n_blocks, jnp.int32))
         freed = 0
         fnp, pnp = np.asarray(found), np.asarray(pages)
         for f, p in zip(fnp, pnp):
@@ -94,4 +137,4 @@ class PageTable:
 
     @property
     def n_live(self) -> int:
-        return int(self.index.n)
+        return int(shd.total_n(self.index))

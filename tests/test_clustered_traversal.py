@@ -199,7 +199,7 @@ def test_apply_ops_sharded_under_jit_falls_back_dense():
 
 
 # ---------------------------------------------------------------------------
-# traversal_bound + shard cache
+# traversal_bound
 # ---------------------------------------------------------------------------
 
 def test_traversal_bound_safe_ceiling_scales_with_occupancy():
@@ -222,20 +222,23 @@ def test_search_kernel_sharded_traceable_under_jit():
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
-@pytest.mark.slow
-def test_shard_cache_reuses_conversion():
-    rng = np.random.default_rng(1)
-    keys = np.sort(rng.choice(1 << 30, 120_000, replace=False)).astype(
-        np.int32)
-    mono = sl.build(jnp.asarray(keys), jnp.asarray(keys // 2),
-                    capacity=2**18, levels=16, foresight=True)
-    assert not kops.fits_vmem(mono)
-    kops._SHARD_CACHE.clear()
-    with pytest.deprecated_call():
-        r1 = kops.search_kernel(mono, jnp.asarray(keys[:64]))
-    shl_cached = kops._SHARD_CACHE[id(mono)][1]
-    with pytest.deprecated_call():
-        r2 = kops.search_kernel(mono, jnp.asarray(keys[64:128]))
-    assert kops._SHARD_CACHE[id(mono)][1] is shl_cached   # no rebuild
-    assert bool(jnp.all(r1.found)) and bool(jnp.all(r2.found))
-    kops._SHARD_CACHE.clear()
+def test_search_kernel_sharded_after_rebalance_shard_count_change():
+    """A rebalanced state (S changed, possibly not a power of two) must
+    launch correctly: every wrapper re-derives grid/K/traversal_bound from
+    the state it is handed, never from a cached plan."""
+    shl, keys, rng = _index(n=800, n_shards=4, levels=10)
+    q = jnp.asarray(np.concatenate([
+        rng.choice(keys, 96), rng.integers(0, 1 << 22, 64),
+    ]).astype(np.int32))
+    before = kops.search_kernel_sharded(shl, q)
+    shl2 = shd.split_shard(shl, 0)                 # S: 4 -> 5 (not pow2)
+    shl2 = shd.split_shard(shl2, 3)                # S: 5 -> 6
+    after = kops.search_kernel_sharded(shl2, q)
+    # node ids are shard-local and legitimately differ; found/vals must not
+    np.testing.assert_array_equal(np.asarray(before.found),
+                                  np.asarray(after.found))
+    np.testing.assert_array_equal(np.asarray(before.vals),
+                                  np.asarray(after.vals))
+    f, v = shd.search_sharded(shl2, q)
+    np.testing.assert_array_equal(np.asarray(after.found), np.asarray(f))
+    np.testing.assert_array_equal(np.asarray(after.vals), np.asarray(v))

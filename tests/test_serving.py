@@ -40,6 +40,37 @@ def test_page_table_pages_recycled():
     assert set(p2.tolist()) == set(p1.tolist())
 
 
+def test_page_table_capacity_failure_raises_and_reclaims():
+    """rebalance=False + multi-shard: every insert routes to shard 0 of
+    the empty table, whose fixed capacity exhausts before the pool does.
+    A capacity-failed insert must raise (the mapping is LOST) and return
+    the failed pages to the free list — never leak silently."""
+    pt = PageTable(PagedCacheConfig(n_pages=64, n_shards=4,
+                                    rebalance=False))
+    usable = pt.index.shard_capacity - 2
+    free0 = len(pt.free)
+    with pytest.raises(RuntimeError, match="capacity"):
+        pt.alloc(np.full(usable + 2, 5), np.arange(usable + 2))
+    assert pt.n_live == usable                     # shard 0 filled, no loss
+    assert len(pt.free) == free0 - usable          # failed pages reclaimed
+    # the same burst with rebalance on completes (guard splits ahead)
+    pt2 = PageTable(PagedCacheConfig(n_pages=64, n_shards=4))
+    pt2.alloc(np.full(usable + 2, 5), np.arange(usable + 2))
+    assert pt2.n_live == usable + 2
+    found, _ = pt2.lookup(np.full(usable + 2, 5), np.arange(usable + 2))
+    assert bool(jnp.all(found))
+
+
+def test_page_table_kernel_path_sizes_shards_for_vmem():
+    """use_kernel on a big pool must partition so the per-shard tile fits
+    the VMEM budget — the old oversized-monolith auto-reshard is gone, so
+    the table itself has to be built fitting."""
+    from repro.kernels import ops as kops
+    pt = PageTable(PagedCacheConfig(n_pages=2**17, use_kernel=True))
+    assert pt.index.n_shards > 1
+    assert kops.fits_vmem(pt.index)
+
+
 def test_engine_end_to_end_generates():
     cfg = get_smoke("llama3_8b")
     params = T.init_params(cfg, jax.random.PRNGKey(0))

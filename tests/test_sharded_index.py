@@ -68,8 +68,11 @@ def test_sharded_kernel_matches_monolithic(foresight):
     np.testing.assert_array_equal(np.asarray(rk.vals), np.asarray(rc.vals))
 
 
-def test_search_kernel_transparent_past_vmem_budget():
-    """Acceptance: levels=16, cap=2**18 fused (32 MiB > 12 MiB budget)."""
+def test_search_kernel_rejects_oversized_monolith():
+    """levels=16, cap=2**18 fused (32 MiB > 12 MiB budget): the old
+    transparent auto-reshard (identity-keyed cache + DeprecationWarning) is
+    gone — the kernel path demands a ShardedSkipList, and the one-shot
+    ``shard_state`` conversion it points to must be bit-identical."""
     keys, rng = _keys(120_000, seed=1, span=1 << 30)
     mono = sl.build(jnp.asarray(keys), jnp.asarray(keys // 2),
                     capacity=2**18, levels=16, foresight=True)
@@ -78,10 +81,25 @@ def test_search_kernel_transparent_past_vmem_budget():
         rng.choice(keys, 128),
         rng.integers(0, 1 << 30, 128),
     ]).astype(np.int32))
-    rk = kops.search_kernel(mono, q)           # silently sharded, not capped
+    with pytest.raises(ValueError, match="ShardedSkipList"):
+        kops.search_kernel(mono, q)
+    shl = kops.shard_state(mono, kops.auto_shards(mono.capacity - 2, 16))
+    assert kops.fits_vmem(shl)
+    rk = kops.search_kernel(shl, q)
     rc = sl.search(mono, q)
     np.testing.assert_array_equal(np.asarray(rk.found), np.asarray(rc.found))
     np.testing.assert_array_equal(np.asarray(rk.vals), np.asarray(rc.vals))
+
+
+def test_search_kernel_sharded_rejects_oversized_tile():
+    """A ShardedSkipList whose PER-SHARD tile is over the VMEM budget (one
+    giant shard) must raise too — the sharded branch is not a loophole."""
+    shl = shd.build_sharded(jnp.asarray([5, 9], jnp.int32),
+                            jnp.asarray([1, 2], jnp.int32),
+                            n_shards=1, capacity=2**18, levels=16)
+    assert not kops.fits_vmem(shl)
+    with pytest.raises(ValueError, match="more shards"):
+        kops.search_kernel(shl, jnp.asarray([5], jnp.int32))
 
 
 def test_shard_state_conversion_preserves_contents():
