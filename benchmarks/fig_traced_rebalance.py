@@ -1,0 +1,177 @@
+"""Traced rebalancing benchmark: jit-compiled split/merge at a static ceiling.
+
+Drives the SAME Zipf(1.2) hot-range insert stream as ``fig_rebalance``
+through ``apply_ops_sharded(..., rebalance=True)`` twice:
+
+* ``eager`` — the host-loop rebalance (shard axis grows per split; every
+  new shard count re-traces downstream consumers);
+* ``traced`` — the whole apply wrapped in ONE ``jax.jit``, the state padded
+  to a static ``max_shards`` ceiling (``core.rebalance_traced``): splits
+  and merges are in-place boundary/content edits, so the stream compiles
+  exactly once and still completes with 0 failed inserts, bit-identical to
+  the eager path and to a monolithic index (asserted here).
+
+Also snapshotted: the batch-scan work model.  The old traced fallback
+scanned dense ``S x B`` ops per batch; the count-then-dispatch segment
+scan does ``S * W * ceil(widest_segment / W)`` (static window ``W``),
+which tracks the widest segment instead of the batch — the saving the
+ROADMAP's "segment saving inside jit" item asked for.  Eager's single
+``S * pow2(widest)`` window is the reference.
+
+``python -m benchmarks.fig_traced_rebalance`` writes
+``BENCH_traced_rebalance.json`` next to the repo root as a regression
+snapshot.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row
+# the stream and its parameters are IMPORTED from fig_rebalance so the two
+# benchmarks (and BENCH_rebalance.json) can never silently desynchronize
+from benchmarks.fig_rebalance import (BATCH, CAPACITY, LEVELS, N_BATCHES,
+                                      N_INIT, N_SHARDS, SPAN, _stream)
+from repro.core import rebalance_traced as rbt
+from repro.core import sharded as shd
+from repro.core import skiplist as sl
+
+MAX_SHARDS = 32        # the static ceiling the traced run compiles at
+
+_SNAPSHOT = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_traced_rebalance.json")
+
+
+def _scan_work(shl, kk: np.ndarray) -> dict:
+    """Batch-scan work model for one batch against the CURRENT partition:
+    dense S x B (the removed fallback), eager single-window, traced
+    count-then-dispatch passes."""
+    S = shl.n_shards
+    B = kk.size
+    sid = np.asarray(shd.route(shl.boundaries, jnp.asarray(kk)))
+    widest = int(np.bincount(sid, minlength=S).max())
+    eager_w = min(B, shd._segment_window(widest))
+    W = shd.default_segment_window(B, S)
+    passes = -(-widest // W)
+    return {"dense": S * B, "eager_segment": S * eager_w,
+            "traced_segment": S * W * passes, "widest_segment": widest,
+            "window": W, "passes": passes}
+
+
+def _drive(shl, batches, initial: np.ndarray, *, jitted: bool):
+    """Returns (final_state, failed_new_inserts, per-batch scan work).
+
+    ``seen`` starts at the initial key set: re-inserting a present key is
+    an upsert (result 0) by contract, not a capacity failure.
+    """
+    if jitted:
+        apply_fn = jax.jit(functools.partial(shd.apply_ops_sharded,
+                                             rebalance=True))
+    else:
+        apply_fn = functools.partial(shd.apply_ops_sharded, rebalance=True)
+    seen = {int(k) for k in initial}
+    failures = 0
+    work = []
+    for kk in batches:
+        work.append(_scan_work(shl, kk))
+        ops = jnp.full((kk.size,), sl.OP_INSERT, jnp.int32)
+        shl, res = apply_fn(shl, ops, jnp.asarray(kk), jnp.asarray(kk * 2))
+        res = np.asarray(res)
+        for i, k in enumerate(kk):
+            if int(k) in seen or res[i]:
+                seen.add(int(k))
+            else:
+                failures += 1
+    traces = apply_fn._cache_size() if jitted else None
+    return shl, failures, work, traces
+
+
+def run() -> list:
+    rng = np.random.default_rng(0)
+    keys = np.sort(rng.choice(SPAN, N_INIT, replace=False)).astype(np.int32)
+    shl0 = shd.build_sharded(jnp.asarray(keys), jnp.asarray(keys * 3),
+                             n_shards=N_SHARDS, capacity=CAPACITY,
+                             levels=LEVELS, seed=0)
+    batches = list(_stream(keys))
+
+    shl_e, fail_e, work_e, _ = _drive(shl0, batches, keys, jitted=False)
+    shl_t, fail_t, work_t, traces = _drive(rbt.pad_shards(shl0, MAX_SHARDS),
+                                           batches, keys, jitted=True)
+    assert fail_e == 0 and fail_t == 0, \
+        f"rebalanced streams must complete failure-free ({fail_e}/{fail_t})"
+    assert traces == 1, f"traced run recompiled: {traces} traces"
+
+    # acceptance: traced result state bit-identical (searches) to the eager
+    # rebalanced state AND a monolithic index fed the same stream
+    mono = sl.build(jnp.asarray(keys), jnp.asarray(keys * 3),
+                    capacity=1024, levels=LEVELS, seed=0)
+    for kk in batches:
+        ops = jnp.full((kk.size,), sl.OP_INSERT, jnp.int32)
+        mono, _ = sl.apply_ops(mono, ops, jnp.asarray(kk),
+                               jnp.asarray(kk * 2))
+    probe = jnp.asarray(np.concatenate(
+        [keys, np.unique(np.concatenate(batches)),
+         rng.integers(0, SPAN, 64)]).astype(np.int32))
+    f_m, v_m = sl.search_fast(mono, probe)
+    for name, s in (("eager", shl_e), ("traced", shl_t)):
+        f_s, v_s = shd.search_sharded(s, probe)
+        assert bool(jnp.all(f_s == f_m)) and bool(jnp.all(v_s == v_m)), \
+            f"{name} rebalanced index diverged from the monolithic oracle"
+    assert bool(shd.check_sharded_invariant(shl_t, expect_n=int(mono.n)))
+
+    def _tot(work, key):
+        return int(sum(w[key] for w in work))
+
+    snapshot = {
+        "n_init": N_INIT, "n_shards_initial": N_SHARDS,
+        "shard_capacity": CAPACITY, "max_shards_ceiling": MAX_SHARDS,
+        "batch": BATCH, "n_batches": N_BATCHES, "zipf_a": 1.2,
+        "eager": {
+            "failed_inserts": fail_e,
+            "n_shards_final": shl_e.n_shards,
+            "scan_work_total": {k: _tot(work_e, k) for k in
+                                ("dense", "eager_segment", "traced_segment")},
+        },
+        "traced": {
+            "failed_inserts": fail_t,
+            "compiled_traces": traces,
+            "n_shards_static": shl_t.n_shards,
+            "live_shards_final": int(rbt.live_shard_count(shl_t)),
+            "scan_work_total": {k: _tot(work_t, k) for k in
+                                ("dense", "eager_segment", "traced_segment")},
+            "scan_work_per_batch": work_t,
+        },
+    }
+    run.snapshot = snapshot
+    t = snapshot["traced"]["scan_work_total"]
+    rows = [
+        csv_row("traced_rebalance/eager", 0.0,
+                f"failed=0;n_shards_final={shl_e.n_shards}"),
+        csv_row("traced_rebalance/jit", 0.0,
+                f"failed=0;traces={traces};"
+                f"live={snapshot['traced']['live_shards_final']}"
+                f"/{MAX_SHARDS}"),
+        csv_row("traced_rebalance/scan_work", 0.0,
+                f"dense_SxB={t['dense']};segment={t['traced_segment']};"
+                f"saving={t['dense'] / max(1, t['traced_segment']):.2f}x"),
+    ]
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    for r in rows:
+        print(r)
+    with open(_SNAPSHOT, "w") as f:
+        json.dump(run.snapshot, f, indent=2)
+        f.write("\n")
+    print(f"# snapshot -> {_SNAPSHOT}")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,13 +3,19 @@ from repro.core.skiplist import (KEY_MAX, KEY_MIN, OP_DELETE, OP_INSERT,
                                  OP_READ, SearchResult, SkipListState,
                                  apply_ops, build, check_foresight_invariant,
                                  contains, delete, empty, insert,
-                                 sample_heights, search, to_sorted_keys)
+                                 sample_heights, search, sorted_live_kv,
+                                 to_sorted_keys)
 from repro.core.sharded import (RebalanceStats, ShardedSkipList,
                                 apply_ops_sharded, build_sharded,
                                 check_sharded_invariant, contains_sharded,
                                 empty_sharded, merge_shards,
                                 range_scan_sharded, rebalance, repack,
                                 route, search_sharded, split_shard, total_n)
+from repro.core.rebalance_traced import (exhaustion_guard_traced,
+                                         live_shard_count,
+                                         merge_shards_traced, pad_shards,
+                                         split_shard_traced,
+                                         watermark_rebalance_traced)
 from repro.core.validated import (PredValidation, search_validated,
                                   validate_preds)
 from repro.core.versioned import IndexView, VersionedIndex
@@ -18,10 +24,13 @@ __all__ = [
     "KEY_MAX", "KEY_MIN", "OP_DELETE", "OP_INSERT", "OP_READ",
     "SearchResult", "SkipListState", "apply_ops", "build",
     "check_foresight_invariant", "contains", "delete", "empty", "insert",
-    "sample_heights", "search", "to_sorted_keys", "search_validated",
+    "sample_heights", "search", "sorted_live_kv", "to_sorted_keys",
+    "search_validated",
     "validate_preds", "PredValidation", "IndexView", "VersionedIndex",
     "RebalanceStats", "ShardedSkipList", "apply_ops_sharded",
     "build_sharded", "check_sharded_invariant", "contains_sharded",
     "empty_sharded", "merge_shards", "range_scan_sharded", "rebalance",
     "repack", "route", "search_sharded", "split_shard", "total_n",
+    "exhaustion_guard_traced", "live_shard_count", "merge_shards_traced",
+    "pad_shards", "split_shard_traced", "watermark_rebalance_traced",
 ]

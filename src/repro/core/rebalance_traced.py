@@ -1,0 +1,333 @@
+"""Traced shard rebalancing — split/merge under ``jit`` at a static ceiling.
+
+The eager rebalancing in ``core.sharded`` (``split_shard`` / ``merge_shards``
+/ ``_watermark_rebalance`` / ``_exhaustion_guard``) concretizes occupancy on
+the host and *changes the shard-axis length*, so it cannot run inside a
+``jax.jit``-traced computation — exactly where a production serving loop
+lives.  This module is the traced counterpart, following the B-Skiplist
+(2025) fixed-fanout relayout trick: the stacked shard pytree is padded to a
+static ``max_shards`` ceiling (``pad_shards``), dead slots are masked by
+degenerate ``KEY_MAX`` boundaries with zero live keys, and every structural
+operation becomes an *in-place boundary/content edit* on that fixed-shape
+state — no host ``int()`` / ``np.asarray()`` anywhere on the path, no shape
+change, one compiled trace at the ceiling regardless of how many splits or
+merges a stream provokes.
+
+Representation invariants (on top of ``check_sharded_invariant``):
+
+* the shard axis has static length ``S`` (the ceiling); ``live_shard_count``
+  — the number of boundaries below ``KEY_MAX`` — is a *traced* value;
+* dead slots hold an empty skiplist (sentinels only, ``n == 0``) and a
+  ``KEY_MAX`` boundary, so routing never selects them, searches walk through
+  them for free, and cross-shard scans spill past them unchanged;
+* ``KEY_MAX`` boundaries form a suffix: splits insert a real boundary
+  strictly left of the suffix and drop one trailing dead slot; merges drop
+  one real boundary and append a fresh dead slot at the end.
+
+Every edit preserves contents exactly (``total_n`` conserved; only the
+partition and resampled tower heights change), which is what makes the
+traced drivers linearization-safe: the exhaustion guard runs *before* the
+op batch and the watermark pass *after*, and neither moves a key's value.
+
+``sharded.apply_ops_sharded(..., rebalance=True)`` dispatches here
+automatically whenever its inputs are tracers; callers that want growth
+headroom under ``jit`` must hand it a padded state (``pad_shards``, or an
+``empty_sharded`` built directly at the ceiling) — a fully-live state has no
+dead slot to spend, so the guard cannot split it further and the normal
+signalled-failure contract applies to any insert past a shard's capacity.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.skiplist import (KEY_MAX, NULL_VAL, OP_INSERT, build, empty,
+                                 sorted_live_kv)
+from repro.core.sharded import (HIGH_WATER, LOW_WATER, RebalanceStats,
+                                ShardedSkipList, route, search_sharded,
+                                validate_watermarks)
+
+
+def live_shard_count(shl: ShardedSkipList) -> jax.Array:
+    """Traced count of shards with a real (sub-``KEY_MAX``) boundary.
+
+    Dead padding slots and genuinely-empty builder-padding shards are
+    indistinguishable — both are spendable split headroom — so this is
+    also "ceiling minus available split slots".
+    """
+    return jnp.sum(shl.boundaries < KEY_MAX).astype(jnp.int32)
+
+
+def _dead_shard(capacity: int, levels: int, foresight: bool):
+    """One dead slot: sentinels only, never routed to (KEY_MAX boundary)."""
+    return empty(capacity, levels, foresight=foresight, seed=0)
+
+
+def pad_shards(shl: ShardedSkipList, max_shards: int) -> ShardedSkipList:
+    """Pad the shard axis to a static ``max_shards`` ceiling with dead slots.
+
+    The returned state is search/scan-bit-identical to the input (dead
+    slots are invisible to routing) but gives the traced drivers
+    ``max_shards - live`` split slots to spend.  Static shape change:
+    call it *outside* the jitted region, once, like a build.
+    """
+    S = shl.n_shards
+    M = int(max_shards)
+    if M < S:
+        raise ValueError(f"max_shards={M} below current shard count {S}; "
+                         "use repack(shl, n_shards=...) to shrink first")
+    if M == S:
+        return shl
+    dead = _dead_shard(shl.shard_capacity, shl.levels, shl.foresight)
+    new_shards = jax.tree.map(
+        lambda full, d: jnp.concatenate(
+            [full, jnp.broadcast_to(d[None], (M - S,) + d.shape)], axis=0),
+        shl.shards, dead)
+    boundaries = jnp.concatenate(
+        [shl.boundaries, jnp.full((M - S,), KEY_MAX, jnp.int32)])
+    return ShardedSkipList(shards=new_shards, boundaries=boundaries)
+
+
+# ---------------------------------------------------------------------------
+# Fixed-shape structural edits (the traced analogues of split/merge)
+# ---------------------------------------------------------------------------
+
+def split_shard_traced(shl: ShardedSkipList, s, at_key, *, seed=0
+                       ) -> ShardedSkipList:
+    """Split shard ``s`` at ``at_key`` without changing the shard axis.
+
+    ``s`` and ``at_key`` may be traced scalars.  Shards right of ``s``
+    shift one slot toward the tail, consuming the last (dead) slot; the
+    left half keeps keys ``< at_key``, the right keys ``>= at_key``, both
+    re-bulk-built at the shared static capacity (same construction — and
+    same ``seed`` / ``seed + 1`` tower resampling — as the eager
+    ``sharded.split_shard``).  PRECONDITIONS (caller-enforced; the traced
+    drivers guarantee them): the last slot is dead, ``at_key`` falls
+    strictly inside shard ``s``'s open key range.
+    """
+    S = shl.n_shards
+    cap, L, fs = shl.shard_capacity, shl.levels, shl.foresight
+    s = jnp.asarray(s, jnp.int32)
+    at_key = jnp.asarray(at_key, jnp.int32)
+    shard = jax.tree.map(lambda a: a[s], shl.shards)
+    ks, vs = sorted_live_kv(shard)
+    n = shard.n
+    n_left = jnp.sum(ks < at_key).astype(jnp.int32)   # padding is KEY_MAX
+    idx = jnp.arange(cap - 2)
+    left = build(ks, vs, capacity=cap, levels=L, foresight=fs, seed=seed,
+                 valid=idx < n_left)
+    right = build(jnp.roll(ks, -n_left), jnp.roll(vs, -n_left), capacity=cap,
+                  levels=L, foresight=fs, seed=seed + 1,
+                  valid=idx < n - n_left)
+    i = jnp.arange(S, dtype=jnp.int32)
+    src = jnp.where(i <= s, i, i - 1)                  # shift-right from s+1
+
+    def place(full, lf, rt):
+        moved = jnp.take(full, src, axis=0)
+        m = i.reshape((S,) + (1,) * (full.ndim - 1))
+        return jnp.where(m == s, lf[None],
+                         jnp.where(m == s + 1, rt[None], moved))
+
+    new_shards = jax.tree.map(place, shl.shards, left, right)
+    boundaries = jnp.where(i == s + 1, at_key, jnp.take(shl.boundaries, src))
+    return ShardedSkipList(shards=new_shards, boundaries=boundaries)
+
+
+def merge_shards_traced(shl: ShardedSkipList, s, *, seed=0
+                        ) -> ShardedSkipList:
+    """Merge shards ``s`` and ``s + 1`` in place; a dead slot appends.
+
+    ``s`` may be a traced scalar.  PRECONDITIONS (caller-enforced): both
+    shards are live (``boundaries[s + 1] < KEY_MAX``) and their combined
+    occupancy fits the static capacity (``n_a + n_b + 2 <= capacity``) —
+    the traced watermark driver only selects pairs satisfying both.
+    """
+    S = shl.n_shards
+    cap, L, fs = shl.shard_capacity, shl.levels, shl.foresight
+    s = jnp.asarray(s, jnp.int32)
+    a = jax.tree.map(lambda x: x[s], shl.shards)
+    b = jax.tree.map(lambda x: x[s + 1], shl.shards)
+    ka, va = sorted_live_kv(a)
+    kb, vb = sorted_live_kv(b)
+    na, nb = a.n, b.n
+    # adjacent disjoint sorted runs concatenate sorted: positions < na from
+    # a, < na + nb from b (shifted), the rest padding
+    i = jnp.arange(cap - 2)
+    j = jnp.clip(i - na, 0, cap - 3)
+    ks = jnp.where(i < na, ka,
+                   jnp.where(i < na + nb, jnp.take(kb, j), KEY_MAX))
+    vs = jnp.where(i < na, va,
+                   jnp.where(i < na + nb, jnp.take(vb, j), NULL_VAL))
+    merged = build(ks, vs, capacity=cap, levels=L, foresight=fs, seed=seed,
+                   valid=i < na + nb)
+    dead = _dead_shard(cap, L, fs)
+    i = jnp.arange(S, dtype=jnp.int32)
+    src = jnp.where(i <= s, i, jnp.minimum(i + 1, S - 1))  # shift-left
+
+    def place(full, mg, dd):
+        moved = jnp.take(full, src, axis=0)
+        m = i.reshape((S,) + (1,) * (full.ndim - 1))
+        return jnp.where(m == s, mg[None],
+                         jnp.where(m == S - 1, dd[None], moved))
+
+    new_shards = jax.tree.map(place, shl.shards, merged, dead)
+    boundaries = jnp.where(i == S - 1, KEY_MAX,
+                           jnp.take(shl.boundaries, src))
+    return ShardedSkipList(shards=new_shards, boundaries=boundaries)
+
+
+# ---------------------------------------------------------------------------
+# Traced drivers: watermark re-leveling + batch exhaustion guard
+# ---------------------------------------------------------------------------
+
+def _ceiling(shl: ShardedSkipList, max_shards: int) -> int:
+    """Effective live-shard ceiling: the static axis, tightened by the
+    caller's ``max_shards`` knob when that is smaller."""
+    S = shl.n_shards
+    return min(int(max_shards), S) if max_shards else S
+
+
+def watermark_rebalance_traced(shl: ShardedSkipList, *,
+                               high_water: float = HIGH_WATER,
+                               low_water: float = LOW_WATER,
+                               max_shards: int = 0, seed=0
+                               ) -> Tuple[ShardedSkipList, RebalanceStats]:
+    """Traced watermark pass: split every shard above ``high_water`` (while
+    dead slots remain), then merge underfull live neighbours — the same
+    semantics and termination argument as the eager ``_watermark_rebalance``
+    (``high_water > 0.5`` keeps split halves below the high mark), expressed
+    as two ``lax.while_loop``s over the fixed-shape state.  Watermarks must
+    be static Python floats; ``seed`` may be traced.  Returns
+    ``(new_state, RebalanceStats)`` with *traced* split/merge counts.
+    """
+    validate_watermarks(high_water, low_water)
+    S = shl.n_shards
+    usable = shl.shard_capacity - 2
+    ceil_ = _ceiling(shl, max_shards)
+    hi_mark = high_water * usable
+    lo_mark = low_water * usable
+
+    def s_cond(carry):
+        st, k = carry
+        over = (st.shards.n > hi_mark) & (st.shards.n >= 2)
+        return (live_shard_count(st) < ceil_) & jnp.any(over) & (k < S)
+
+    def s_body(carry):
+        st, k = carry
+        ns = st.shards.n
+        score = jnp.where((ns > hi_mark) & (ns >= 2), ns, -1)
+        s = jnp.argmax(score).astype(jnp.int32)
+        shard = jax.tree.map(lambda a: a[s], st.shards)
+        ks, _ = sorted_live_kv(shard)
+        at = jnp.take(ks, shard.n // 2)        # median; keys unique => valid
+        return split_shard_traced(st, s, at, seed=seed + k), k + 1
+
+    shl, splits = lax.while_loop(s_cond, s_body, (shl, jnp.int32(0)))
+
+    def _merge_ok(st):
+        ns, b = st.shards.n, st.boundaries
+        comb = ns[:-1] + ns[1:]
+        right_live = b[1:] < KEY_MAX           # excludes dead-slot pairs
+        return right_live & (comb <= hi_mark) & \
+            ((ns[:-1] < lo_mark) | (ns[1:] < lo_mark)), comb
+
+    def m_cond(carry):
+        st, j = carry
+        ok, _ = _merge_ok(st)
+        return jnp.any(ok) & (live_shard_count(st) > 1) & (j < S)
+
+    def m_body(carry):
+        st, j = carry
+        ok, comb = _merge_ok(st)
+        score = jnp.where(ok, comb, jnp.iinfo(jnp.int32).max)
+        s = jnp.argmin(score).astype(jnp.int32)
+        return merge_shards_traced(st, s, seed=seed + j), j + 1
+
+    shl, merges = lax.while_loop(m_cond, m_body, (shl, jnp.int32(0)))
+    return shl, RebalanceStats(splits, merges)
+
+
+def exhaustion_guard_traced(shl: ShardedSkipList, op_types: jax.Array,
+                            keys: jax.Array, *, max_shards: int = 0, seed=0
+                            ) -> Tuple[ShardedSkipList, jax.Array]:
+    """Traced pre-pass: split ahead of any shard this batch's routed NEW
+    inserts would exhaust, so no insert fails on capacity a rebalance could
+    have provided.  Mirrors the eager ``_exhaustion_guard`` — projection is
+    ``n_s + (# distinct new keys routed to s)``, the worst offender splits
+    at the median of its combined live + incoming key multiset, falling
+    back to the smallest separating key — with the host loop replaced by a
+    ``lax.while_loop`` and the dynamic-size key sets by ``KEY_MAX``-masked
+    fixed-width arrays.  Stops when every projection fits, the dead slots
+    run out, or the worst shard's key mass is indivisible (then the normal
+    signalled-failure contract applies to the following apply).
+    """
+    S = shl.n_shards
+    usable = shl.shard_capacity - 2
+    ceil_ = _ceiling(shl, max_shards)
+    B = keys.shape[0]
+    if B == 0:
+        return shl, jnp.int32(0)
+    k_ins = jnp.where(op_types == OP_INSERT, keys, KEY_MAX)
+    k_sorted = jnp.sort(k_ins)
+    distinct = (k_sorted != KEY_MAX) & jnp.concatenate(
+        [jnp.ones((1,), jnp.bool_), k_sorted[1:] != k_sorted[:-1]])
+
+    def _count(st, mask):
+        sid = route(st.boundaries, k_sorted)
+        add = jnp.zeros((S,), jnp.int32).at[sid].add(mask.astype(jnp.int32))
+        return sid, add
+
+    # conservative pre-filter, mirroring the eager guard: every distinct
+    # insert counted as new.  Only if some shard COULD exceed capacity does
+    # the exact pass below pay a whole-index presence search to discount
+    # upserts — a steady-state batch far from the watermarks skips it.
+    _, add0 = _count(shl, distinct)
+    need = jnp.any(shl.shards.n + add0 > usable)
+
+    def _skip(st):
+        return st, jnp.int32(0)
+
+    def _run(st):
+        # presence never changes during the guard (splits preserve
+        # contents), so one batched search discounts every iteration
+        present = search_sharded(st, k_sorted)[0]
+        new_mask = distinct & ~present
+
+        # the projection is computed ONCE per iteration, in the body: the
+        # cond only reads the carried `go` flag the previous body derived
+        def cond(carry):
+            _, k, go = carry
+            return go & (k < S)
+
+        def body(carry):
+            s2, k, go = carry
+            sid, add = _count(s2, new_mask)
+            proj = s2.shards.n + add
+            work = jnp.any(proj > usable) & (live_shard_count(s2) < ceil_)
+            s = jnp.argmax(jnp.where(proj > usable, proj, -1)
+                           ).astype(jnp.int32)
+            shard = jax.tree.map(lambda a: a[s], s2.shards)
+            live_keys, _ = sorted_live_kv(shard)        # [cap-2], KEY_MAX pad
+            incoming = jnp.where(new_mask & (sid == s), k_sorted, KEY_MAX)
+            combined = jnp.sort(jnp.concatenate([live_keys, incoming]))
+            m = shard.n + jnp.take(add, s)              # combined live count
+            at = jnp.take(combined, m // 2)
+            first = combined[0]
+            # median == min: take the smallest strictly-larger key instead;
+            # none left means the key mass is indivisible -> stop
+            alt = jnp.min(jnp.where(combined > first, combined, KEY_MAX))
+            at = jnp.where(at == first, alt, at)
+            do = work & (at < KEY_MAX)
+            s2 = lax.cond(
+                do, lambda t: split_shard_traced(t, s, at, seed=seed + k),
+                lambda t: t, s2)
+            return s2, k + jnp.where(do, 1, 0).astype(jnp.int32), do
+
+        s2, splits, _ = lax.while_loop(
+            cond, body, (st, jnp.int32(0), jnp.bool_(True)))
+        return s2, splits
+
+    return lax.cond(need, _run, _skip, shl)

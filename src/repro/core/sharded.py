@@ -59,16 +59,32 @@ occupancy fits under ``high_water`` and at least one of them sits below
 ``low_water``.  ``high_water > 0.5`` is required so a split's halves land
 strictly below the high mark (no split/merge ping-pong).
 
-Rebalancing concretizes occupancy on the host, so it runs eagerly only:
-``apply_ops_sharded(..., rebalance=True)`` guards capacity *before*
-applying (splitting ahead of any shard the routed inserts would exhaust —
-linearization is untouched because contents never change) and re-levels
-watermarks after; under ``jit`` tracing the knob degrades to the fixed-
-boundary behaviour (see ROADMAP for the traced-rebalance follow-up).
+Rebalancing runs in BOTH execution regimes.  ``apply_ops_sharded(...,
+rebalance=True)`` guards capacity *before* applying (splitting ahead of any
+shard the routed inserts would exhaust — linearization is untouched because
+contents never change) and re-levels watermarks after.  Eagerly, the passes
+here concretize occupancy on the host and grow/shrink the shard axis.
+Under ``jit`` tracing, the call dispatches to ``core.rebalance_traced``:
+the state must carry a static ``max_shards`` ceiling (``pad_shards`` /
+``empty_sharded`` built at the ceiling — dead slots are masked by
+degenerate ``KEY_MAX`` boundaries and zero live keys), and splits/merges
+become in-place boundary/content edits on that fixed shape, so the whole
+serving loop compiles ONCE at the ceiling no matter how many shards come
+and go.  Nothing degrades silently: an eager host-pass failure warns (and
+falls back to fixed boundaries for that batch), an untraceable traced
+configuration raises at trace time (no exception is swallowed), and
+capacity exhaustion at a full ceiling stays per-op SIGNALLED (result
+flag 0) — the observable insert-failure contract, not a hidden one.
+
+The segment-scoped batch scan survives tracing the same way: segment
+widths that cannot concretize switch to a count-then-dispatch multi-pass
+window loop (see ``apply_ops_sharded``) instead of the old dense ``S x B``
+fallback, so traced callers keep the segment saving.
 """
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import NamedTuple, Optional, Tuple
 
 import jax
@@ -80,7 +96,7 @@ from repro.core.skiplist import (HEAD, KEY_MAX, KEY_MIN, NULL_VAL,
                                  OP_INSERT, OP_READ, SkipListState,
                                  apply_ops, build,
                                  check_foresight_invariant,
-                                 effective_top_level)
+                                 effective_top_level, sorted_live_kv)
 
 
 class ShardedSkipList(NamedTuple):
@@ -174,7 +190,10 @@ def empty_sharded(*, n_shards: int, capacity: int, levels: int = 16,
     initially routes to shard 0; with ``apply_ops_sharded(...,
     rebalance=True)`` splits then carve out real boundaries as it fills —
     the growth path for callers that start from nothing (e.g. the paged
-    KV page table).
+    KV page table).  Built at ``n_shards = max_shards`` this is exactly
+    the padded fixed-shape state the traced rebalancer needs (every spare
+    shard is a spendable split slot), so a ``jit``-wrapped apply loop
+    compiles once at the ceiling — see ``core.rebalance_traced``.
     """
     z = jnp.zeros((0,), jnp.int32)
     return build_sharded(z, z, n_shards=n_shards, capacity=capacity,
@@ -319,13 +338,10 @@ class RebalanceStats(NamedTuple):
 def _shard_sorted_kv(shard: SkipListState) -> Tuple[jax.Array, jax.Array]:
     """One shard's live (key, val) pairs in key order, padded to cap - 2.
 
-    Unused, deleted, and tail slots all hold ``KEY_MAX`` and the head
-    ``KEY_MIN``, so a single argsort recovers the live prefix (positions
-    ``1 .. n``); the suffix past ``shard.n`` is padding.
+    Delegates to ``skiplist.sorted_live_kv`` — the fixed-shape compaction
+    primitive shared with the traced rebalancer (``core.rebalance_traced``).
     """
-    cap = shard.capacity
-    order = jnp.argsort(shard.keys)
-    return shard.keys[order][1:cap - 1], shard.vals[order][1:cap - 1]
+    return sorted_live_kv(shard)
 
 
 def _set_shard_slice(shl: ShardedSkipList, s: int, width: int,
@@ -349,8 +365,9 @@ def split_shard(shl: ShardedSkipList, s: int,
     ``at_key`` becomes the right shard's boundary, so it must fall strictly
     inside shard ``s``'s current key range.  Contents are preserved exactly
     (both halves are re-bulk-built at the shared static capacity); only
-    tower heights are resampled.  Host-side eager only: occupancy must
-    concretize.
+    tower heights are resampled.  Host-side eager only (occupancy must
+    concretize, and the shard axis grows): under ``jit`` use the fixed-
+    shape ``rebalance_traced.split_shard_traced`` on a padded state.
     """
     s = int(s)
     S = shl.n_shards
@@ -392,7 +409,8 @@ def merge_shards(shl: ShardedSkipList, s: int, *, seed: int = 0
     Their combined live count must fit the shared static capacity
     (``n_a + n_b + 2 <= shard_capacity``); key ranges are adjacent and
     disjoint, so concatenating the two sorted live runs is already sorted.
-    Host-side eager only.
+    Host-side eager only (the shard axis shrinks): under ``jit`` use
+    ``rebalance_traced.merge_shards_traced``.
     """
     s = int(s)
     S = shl.n_shards
@@ -429,7 +447,8 @@ def repack(shl: ShardedSkipList, n_shards: int = 0, *, seed: int = 0
     the current count) at the same static per-shard capacity.  This is the
     amortized counterpart of incremental split/merge: after heavy skew it
     equalizes occupancy to within one key across shards.  Host-side eager
-    only.
+    only (by design, even after the traced rebalancer: a full re-partition
+    is the amortization point where a host round-trip is already paid).
     """
     S = shl.n_shards
     S2 = int(n_shards) or S
@@ -445,6 +464,31 @@ def repack(shl: ShardedSkipList, n_shards: int = 0, *, seed: int = 0
                          foresight=fs, seed=seed)
 
 
+def validate_watermarks(high_water: float, low_water: float) -> None:
+    """Shared public-kwarg validation (explicit raises: survive python -O)
+    for the eager AND traced watermark drivers — one accepted range."""
+    if not 0.5 < high_water <= 1.0:
+        raise ValueError(f"high_water={high_water} must be in (0.5, 1.0] "
+                         "(split halves must land below the high mark)")
+    if not 0.0 < low_water < high_water:
+        raise ValueError(f"low_water={low_water} must be in "
+                         f"(0, high_water={high_water})")
+
+
+def _has_static_ceiling(shl: ShardedSkipList) -> bool:
+    """Concrete check: does this (eager) state carry dead ceiling slots?
+
+    A dead last slot (``KEY_MAX`` boundary, see ``rebalance_traced``)
+    marks a padded fixed-shape state whose rebalancing must stay in place
+    — the shape-changing host drivers would destroy the ceiling.  Forces
+    a device readback; call only on rebalancing paths.  The ceiling is
+    carried ONLY by this suffix: a padded state whose every slot has gone
+    live is indistinguishable from a built-at-``S`` state and eager
+    rebalancing may resume changing its shape (see ``apply_ops_sharded``).
+    """
+    return shl.n_shards > 1 and int(shl.boundaries[-1]) == int(KEY_MAX)
+
+
 def _watermark_rebalance(shl: ShardedSkipList, *, high_water: float,
                          low_water: float, max_shards: int, seed: int = 0
                          ) -> Tuple[ShardedSkipList, RebalanceStats]:
@@ -452,12 +496,7 @@ def _watermark_rebalance(shl: ShardedSkipList, *, high_water: float,
     neighbours.  See the module docstring for the watermark semantics and
     the termination argument (``high_water > 0.5`` keeps split halves
     below the high mark; merges only form shards below it)."""
-    if not 0.5 < high_water <= 1.0:     # public kwarg: survive python -O
-        raise ValueError(f"high_water={high_water} must be in (0.5, 1.0] "
-                         "(split halves must land below the high mark)")
-    if not 0.0 < low_water < high_water:
-        raise ValueError(f"low_water={low_water} must be in "
-                         f"(0, high_water={high_water})")
+    validate_watermarks(high_water, low_water)
     usable = shl.shard_capacity - 2
     splits = merges = 0
     while shl.n_shards < max_shards:
@@ -472,8 +511,12 @@ def _watermark_rebalance(shl: ShardedSkipList, *, high_water: float,
         splits += 1
     while shl.n_shards > 1:
         ns = np.asarray(shl.shards.n)
+        b = np.asarray(shl.boundaries)
         comb = ns[:-1] + ns[1:]
-        ok = (comb <= high_water * usable) & \
+        # dead ceiling slots (KEY_MAX boundary, see rebalance_traced) are
+        # split headroom, not merge fodder: folding them away would strip
+        # a padded state's static ceiling
+        ok = (b[1:] < int(KEY_MAX)) & (comb <= high_water * usable) & \
              ((ns[:-1] < low_water * usable) | (ns[1:] < low_water * usable))
         cand = np.flatnonzero(ok)
         if cand.size == 0:
@@ -494,7 +537,17 @@ def rebalance(shl: ShardedSkipList, *, high_water: float = HIGH_WATER,
     simply replaces the old one (any cached launch plan built against the
     OLD boundaries — e.g. a ``ClusterPlan`` — is stale and must be
     rebuilt; ``kernels.ops.search_kernel_sharded`` replans per call).
+
+    A state carrying a static ceiling (dead ``KEY_MAX``-boundary last
+    slot, see ``rebalance_traced``) — or any traced state — re-levels via
+    the fixed-shape in-place driver, preserving the ceiling; only a fully
+    live eager state uses the shape-changing host loop.
     """
+    if _is_tracing(shl) or _has_static_ceiling(shl):
+        from repro.core import rebalance_traced as rbt
+        return rbt.watermark_rebalance_traced(
+            shl, high_water=high_water, low_water=low_water,
+            max_shards=max_shards, seed=seed)
     return _watermark_rebalance(shl, high_water=high_water,
                                 low_water=low_water, max_shards=max_shards,
                                 seed=seed)
@@ -570,12 +623,30 @@ def shard_segments(sid_sorted: jax.Array, n_shards: int
     return starts, ends - starts
 
 
+def _is_tracing(*trees) -> bool:
+    """True when any leaf of any argument is a JAX tracer."""
+    return any(isinstance(leaf, jax.core.Tracer)
+               for t in trees for leaf in jax.tree.leaves(t))
+
+
+def _segment_window(W: int) -> int:
+    """Round a window width up to a power of two (>= 8).
+
+    Positions past a segment's length are masked to no-op reads anyway,
+    and pow2 windows bound the distinct (S, W) traces of the vmapped scan
+    to log2(B) variants.
+    """
+    return max(8, 1 << (W - 1).bit_length())
+
+
 def apply_ops_sharded(shl: ShardedSkipList, op_types: jax.Array,
                       keys: jax.Array, vals: jax.Array, *,
                       rebalance: bool = False,
                       high_water: float = HIGH_WATER,
                       low_water: float = LOW_WATER,
-                      max_shards: int = MAX_SHARDS
+                      max_shards: int = MAX_SHARDS,
+                      max_segment: int = 0,
+                      seed=0
                       ) -> Tuple[ShardedSkipList, jax.Array]:
     """Apply a linearized mixed-op batch, routed per shard.
 
@@ -590,9 +661,17 @@ def apply_ops_sharded(shl: ShardedSkipList, op_types: jax.Array,
     keeps it; results are unsorted back via the inverse permutation, so the
     outcome is bit-identical to the monolithic ``apply_ops``.
 
-    ``W`` is concretized from the routed batch, so calls under ``jit``
-    (where segment lengths are traced) fall back to the dense full-batch
-    scan — correct, just without the segment saving.
+    The scan runs as a count-then-dispatch in BOTH regimes
+    (``_apply_segment_passes``): phase one routes and counts, phase two
+    sweeps each segment in ``max_segment``-wide passes via a
+    ``lax.while_loop`` whose trip count is ``ceil(widest / max_segment)``.
+    Eagerly the widest segment concretizes and one pass covers it; under
+    ``jit`` it cannot, so the static window (``max_segment`` hint, default
+    ``2 * ceil(B / S)`` rounded to a power of two) bounds each pass and
+    the traced trip count tracks the widest segment — work is
+    ``S * max_segment`` per pass, NOT the dense ``S * B`` of the removed
+    fallback, and one shared implementation makes eager-vs-jit bit
+    identity hold by construction.
 
     Capacity caveat: each shard has a FIXED capacity, so a key-skewed insert
     stream can exhaust one shard while others have room — those inserts
@@ -603,80 +682,143 @@ def apply_ops_sharded(shl: ShardedSkipList, op_types: jax.Array,
     untouched, so linearization and results stay bit-identical to the
     monolithic ``apply_ops`` given sufficient total capacity), and a post-
     pass re-levels the watermarks (splitting overfull shards, merging
-    underfull neighbours) for the batches to come.  Both passes concretize
-    occupancy on the host, so under ``jit`` tracing the knob silently
-    degrades to the fixed-boundary behaviour (dense fallback included).
+    underfull neighbours) for the batches to come.  Eagerly those passes
+    run on the host and grow/shrink the shard axis (up to ``max_shards``);
+    under tracing they dispatch to ``core.rebalance_traced`` and edit the
+    fixed-shape state in place — the state's static shard axis is the
+    ceiling, so traced callers needing growth headroom must pad first
+    (``rebalance_traced.pad_shards`` or an ``empty_sharded`` built at the
+    ceiling).  Nothing degrades silently: an eager host-pass failure
+    warns (then applies with fixed boundaries), an untraceable traced
+    configuration raises at trace time, and inserts that exhaust a FULL
+    ceiling stay per-op signalled (result 0) like any capacity failure.
+    Note the ceiling is represented only by the dead-slot suffix: once
+    every slot is live a padded state is indistinguishable from a
+    built-at-``S`` one, so a later *eager* rebalance may legitimately
+    grow/shrink the axis again (a jitted apply never can — shapes are
+    static inside the trace; the next eager→jit handoff simply retraces
+    once at the new shape).  ``seed`` feeds the tower resampling of every
+    guard/watermark split and merge (eager and traced), so differently-
+    seeded streams grow different tower layouts.
     """
     op_types = op_types.astype(jnp.int32)
     keys = keys.astype(jnp.int32)
     vals = vals.astype(jnp.int32)
+    traced = _is_tracing(shl, op_types, keys, vals, seed)
+    in_place = False
     if rebalance:
-        try:
-            shl, _ = _exhaustion_guard(shl, op_types, keys,
-                                       max_shards=max_shards)
-        except jax.errors.JAXTypeError:
-            # traced: host-side passes unavailable.  JAXTypeError covers
-            # both ConcretizationTypeError (int()) and its sibling
-            # TracerArrayConversionError (np.asarray() on a tracer)
-            rebalance = False
+        # A padded fixed-shape state rebalances in place even EAGERLY: the
+        # host drivers would grow the axis past the ceiling (guard) and
+        # merge the padding away (watermark), silently destroying the
+        # one-trace contract of the next jitted call.  (Checked only under
+        # rebalance: _has_static_ceiling is a device readback.)
+        in_place = traced or _has_static_ceiling(shl)
+        if in_place:
+            from repro.core import rebalance_traced as rbt
+            shl, _ = rbt.exhaustion_guard_traced(
+                shl, op_types, keys, max_shards=max_shards, seed=seed)
+        else:
+            try:
+                shl, _ = _exhaustion_guard(shl, op_types, keys,
+                                           max_shards=max_shards, seed=seed)
+            except jax.errors.JAXTypeError as e:
+                warnings.warn(
+                    "apply_ops_sharded(rebalance=True): the eager host "
+                    f"rebalance passes are unavailable here ({e!r}); "
+                    "falling back to FIXED boundaries for this batch — "
+                    "skewed inserts may fail on shard capacity",
+                    RuntimeWarning, stacklevel=2)
+                rebalance = False
     S = shl.n_shards
     B = keys.shape[0]
     sid = route(shl.boundaries, keys)
     perm = jnp.argsort(sid, stable=True)
     sid_s = sid[perm]
     starts, lens = shard_segments(sid_s, S)
-    try:
-        W = int(jnp.max(lens)) if B else 0
-    except jax.errors.ConcretizationTypeError:
-        return _apply_ops_sharded_dense(shl, op_types, keys, vals, sid)
-    if W == 0:
+    if B == 0:
         return shl, jnp.zeros((B,), jnp.int32)
-    # round the window up to a power of two (clamped to B): positions past a
-    # segment's length are masked to no-op reads anyway, and this bounds the
-    # distinct (S, W) traces of the vmapped scan to log2(B) variants
-    W = min(B, 1 << (W - 1).bit_length())
-    # pad the sorted batch by W no-op reads so windows never clamp
+    if not traced and not max_segment:
+        # eager default: concretize the widest segment so the pass loop
+        # dispatches in ONE window (>= 1: segment lengths sum to B > 0)
+        max_segment = int(jnp.max(lens))
+    out, results = _apply_segment_passes(shl, op_types, keys, vals,
+                                         perm, starts, lens,
+                                         max_segment=max_segment)
+    if rebalance:
+        if in_place:
+            out, _ = rbt.watermark_rebalance_traced(
+                out, high_water=high_water, low_water=low_water,
+                max_shards=max_shards, seed=seed)
+        else:
+            out, _ = _watermark_rebalance(out, high_water=high_water,
+                                          low_water=low_water,
+                                          max_shards=max_shards, seed=seed)
+    return out, results
+
+
+def default_segment_window(batch: int, n_shards: int) -> int:
+    """Auto ``max_segment`` hint: twice the balanced-routing segment width
+    (``ceil(B / S)``), pow2-rounded — one pass when routing is within 2x of
+    balanced, graceful multi-pass degradation under skew."""
+    return min(max(1, batch), _segment_window(2 * (-(-batch // n_shards))))
+
+
+def _apply_segment_passes(shl: ShardedSkipList, op_types: jax.Array,
+                          keys: jax.Array, vals: jax.Array,
+                          perm: jax.Array, starts: jax.Array,
+                          lens: jax.Array, *, max_segment: int = 0
+                          ) -> Tuple[ShardedSkipList, jax.Array]:
+    """Count-then-dispatch segment scan (the ONLY batch-scan path, eager
+    and traced — eager-vs-jit bit-identity holds by construction).
+
+    Phase one already happened in the caller: routing, the stable sort and
+    the per-shard ``[start, start+len)`` segments.  Phase two sweeps every
+    segment in static ``W``-wide windows: pass ``p`` has shard ``s`` scan
+    ``[starts[s] + p*W, ... + W)`` with positions past its segment length
+    masked to no-op reads (which touch neither state nor RNG, so the
+    windowing is unobservable), and the ``lax.while_loop`` runs
+    ``ceil(max(lens) / W)`` passes — a traced trip count, so one trace
+    serves every skew.  Eager calls concretize the widest segment as ``W``
+    and dispatch in a single pass.
+    """
+    S = shl.n_shards
+    B = keys.shape[0]
+    W = int(max_segment) or default_segment_window(B, S)
+    W = min(B, _segment_window(W))
+    maxlen = jnp.max(lens)
+    # pad the sorted batch by W no-op reads; windows with any live lane
+    # start at < B, so they never clamp (all-dead windows may, harmlessly)
     ops_p = jnp.concatenate([op_types[perm],
                              jnp.full((W,), OP_READ, jnp.int32)])
     keys_p = jnp.concatenate([keys[perm], jnp.zeros((W,), jnp.int32)])
     vals_p = jnp.concatenate([vals[perm], jnp.zeros((W,), jnp.int32)])
 
-    def window(start, ln):
-        o = lax.dynamic_slice(ops_p, (start,), (W,))
-        k = lax.dynamic_slice(keys_p, (start,), (W,))
-        v = lax.dynamic_slice(vals_p, (start,), (W,))
-        return jnp.where(jnp.arange(W) < ln, o, OP_READ), k, v
+    def cond(carry):
+        _, _, p = carry
+        return p * W < maxlen
 
-    ops_w, keys_w, vals_w = jax.vmap(window)(starts, lens)
-    new_shards, res_w = jax.vmap(apply_ops)(shl.shards, ops_w, keys_w,
-                                            vals_w)
-    pos = jnp.arange(B)
-    res_sorted = res_w[sid_s, pos - starts[sid_s]]
+    def body(carry):
+        shards, res_sorted, p = carry
+        off = starts + p * W
+
+        def window(start, ln):
+            o = lax.dynamic_slice(ops_p, (start,), (W,))
+            k = lax.dynamic_slice(keys_p, (start,), (W,))
+            v = lax.dynamic_slice(vals_p, (start,), (W,))
+            valid = p * W + jnp.arange(W) < ln
+            return jnp.where(valid, o, OP_READ), k, v, valid
+
+        ops_w, keys_w, vals_w, valid_w = jax.vmap(window)(off, lens)
+        shards, res_w = jax.vmap(apply_ops)(shards, ops_w, keys_w, vals_w)
+        gpos = off[:, None] + jnp.arange(W)[None, :]
+        res_sorted = res_sorted.at[jnp.where(valid_w, gpos, B)].set(
+            res_w, mode="drop")
+        return shards, res_sorted, p + 1
+
+    shards, res_sorted, _ = lax.while_loop(
+        cond, body, (shl.shards, jnp.zeros((B,), jnp.int32), jnp.int32(0)))
     results = res_sorted[jnp.argsort(perm)]
-    out = shl._replace(shards=new_shards)
-    if rebalance:
-        out, _ = _watermark_rebalance(out, high_water=high_water,
-                                      low_water=low_water,
-                                      max_shards=max_shards)
-    return out, results
-
-
-def _apply_ops_sharded_dense(shl: ShardedSkipList, op_types: jax.Array,
-                             keys: jax.Array, vals: jax.Array,
-                             sid: jax.Array
-                             ) -> Tuple[ShardedSkipList, jax.Array]:
-    """Dense fallback: every shard scans the full batch, off-shard ops
-    masked to no-op reads.  S x B work; used only under tracing where the
-    segment width cannot be concretized."""
-    S = shl.n_shards
-    B = keys.shape[0]
-    ops_m = jnp.where(sid[None, :] == jnp.arange(S)[:, None],
-                      op_types[None, :], OP_READ)
-    keys_m = jnp.broadcast_to(keys[None, :], (S, B))
-    vals_m = jnp.broadcast_to(vals[None, :], (S, B))
-    new_shards, res_m = jax.vmap(apply_ops)(shl.shards, ops_m, keys_m, vals_m)
-    results = res_m[sid, jnp.arange(B)]
-    return shl._replace(shards=new_shards), results
+    return shl._replace(shards=shards), results
 
 
 # ---------------------------------------------------------------------------

@@ -540,6 +540,22 @@ def check_foresight_invariant(state: SkipListState) -> jax.Array:
     return jnp.all(ok)
 
 
+def sorted_live_kv(state: SkipListState) -> Tuple[jax.Array, jax.Array]:
+    """Live (key, val) pairs in key order, padded to ``capacity - 2``.
+
+    The fixed-shape compaction primitive under every split/merge rebuild
+    (``core.sharded`` and ``core.rebalance_traced``): unused, deleted, and
+    tail slots all hold ``KEY_MAX`` and the head ``KEY_MIN``, so a single
+    argsort recovers the live run at positions ``1 .. n``; everything past
+    ``state.n`` is padding.  Output shape is static, so the caller can pair
+    it with a ``valid`` prefix mask and re-``build`` at the same capacity —
+    the in-place relayout move that works identically eager and traced.
+    """
+    cap = state.capacity
+    order = jnp.argsort(state.keys)
+    return state.keys[order][1:cap - 1], state.vals[order][1:cap - 1]
+
+
 def to_sorted_keys(state: SkipListState, max_n: int) -> jax.Array:
     """Walk level 0 and return keys in order (KEY_MAX padded), for tests."""
     def body(i, carry):

@@ -21,7 +21,10 @@ default) a key-skewed ingest stream can no longer fill one shard early:
 re-levels watermarks after (``core.sharded``), and every ``repack_every``
 update batches the store amortizes an occupancy-equalizing ``repack``.
 With it off, the fixed-capacity caveat applies (failed inserts report 0 in
-the result flags).
+the result flags).  ``max_shards`` caps rebalancing growth — and doubles
+as the static ceiling a jit-driven caller pads the index to
+(``core.rebalance_traced.pad_shards``) so traced in-place splits keep
+working inside one compiled trace.
 """
 from __future__ import annotations
 
@@ -50,6 +53,14 @@ class StoreConfig:
                              # tiles (kernels/ops.cluster_queries); False
                              # keeps the dense (B//QBLK, S) launch
     rebalance: bool = True   # sharded only: split/merge around skewed ingest
+    max_shards: int = 0      # shard-count ceiling for rebalancing growth
+                             # (0 = library default, core.sharded.MAX_SHARDS).
+                             # Eagerly this caps host-side split growth; a
+                             # caller driving updates under jit should pad
+                             # the index to this ceiling first
+                             # (core.rebalance_traced.pad_shards) so the
+                             # traced in-place splits have slots to spend
+                             # and the apply traces ONCE at the ceiling.
     repack_every: int = 0    # update batches between amortized repacks
                              # (0 = never; sharded + rebalance only)
     seed: int = 0
@@ -135,7 +146,9 @@ class IndexedSampleStore:
         if self.sharded:
             self.index, results = shd.apply_ops_sharded(
                 self.index, ops, keys, vals,
-                rebalance=self.cfg.rebalance)
+                rebalance=self.cfg.rebalance,
+                max_shards=self.cfg.max_shards or shd.MAX_SHARDS,
+                seed=self.cfg.seed)
             self._updates_since_repack += 1
             if (self.cfg.rebalance and self.cfg.repack_every and
                     self._updates_since_repack >= self.cfg.repack_every):

@@ -59,8 +59,16 @@ at first launch.  A ``ClusterPlan`` is only valid against the boundary
 array it was built from; the clustered wrappers statically reject a plan
 whose K exceeds the current S (the cheap detectable half of staleness —
 ``ops.search_kernel_sharded`` replans per call so callers never hold one
-across a rebalance).  Each distinct S compiles its own kernel; splits move
-S by ±1, so a rebalance burst costs a handful of (small) retraces.
+across a rebalance).  Each distinct S compiles its own kernel; eager
+splits move S by ±1, so an eager rebalance burst costs a handful of
+(small) retraces.  States padded to a static ceiling
+(``core.rebalance_traced.pad_shards`` — the traced-rebalance
+representation) keep S pinned at that ceiling instead, so ONE compiled
+kernel serves every split/merge the traced drivers perform.  Masked
+(dead) shards are tolerated by construction: routing never emits their
+sid, so the dense grid skips their compute via ``pl.when(any(mine))``
+(the tile copy remains — dense is the reference path) and the clustered
+``block_sids`` never name them at all (no copy either).
 
 Kernels are validated in ``interpret=True`` mode on CPU (bit-exact against
 ``ref.py``); block shapes keep the minor dimension at 128 lanes and the

@@ -71,7 +71,7 @@ from repro.kernels.ref import encode_float_keys
 
 VMEM_BUDGET_BYTES = 12 * 1024 * 1024   # leave headroom of the 16 MiB/core
 
-MAX_SHARDS = 1024
+MAX_SHARDS = shd.MAX_SHARDS            # one ceiling, shared with core.sharded
 
 
 class KernelSearchResult(NamedTuple):
@@ -198,11 +198,15 @@ def cluster_queries(boundaries: jax.Array, q_padded: jax.Array, *,
     else:
         K = k_shards
         try:   # an undersized explicit K would silently drop lanes
-            assert K >= int(jnp.max(ndist)), \
-                f"k_shards={K} < widest block's {int(jnp.max(ndist))} shards"
+            widest = int(jnp.max(ndist))
         except jax.errors.ConcretizationTypeError:
-            pass                         # traced: caller vouches for K
-    assert K >= 1
+            widest = None                # traced: caller vouches for K
+        if widest is not None and K < widest:
+            # explicit raise (not assert): must survive python -O
+            raise ValueError(f"k_shards={K} < widest block's {widest} "
+                             "shards — lanes would be dropped")
+    if K < 1:
+        raise ValueError(f"k_shards={K} must be >= 1")
     rows = jnp.broadcast_to(jnp.arange(nblk)[:, None], (nblk, QBLK))
     block_sids = jnp.zeros((nblk, K), jnp.int32)
     block_sids = block_sids.at[rows, jnp.minimum(slot, K - 1)].set(sid_blk)
@@ -243,16 +247,34 @@ def dma_model_bytes(shl: ShardedSkipList, n_queries: int,
 
 def search_kernel_sharded(shl: ShardedSkipList, queries: jax.Array, *,
                           max_steps: int = 0, interpret: bool = True,
-                          cluster: bool = True) -> KernelSearchResult:
+                          cluster: bool = True, k_shards: int = 0
+                          ) -> KernelSearchResult:
     """Kernel-backed search over a partitioned index.
 
     ``cluster=True`` (default) launches the scalar-prefetch clustered grid
     ``(B//QBLK, K)`` — only routed tiles are DMA'd; results are unsorted
     back so the output is bit-identical to ``cluster=False`` (the dense
     ``(B//QBLK, S)`` grid, kept for comparison benchmarks).  Under ``jit``
-    the auto-sized K cannot concretize, so the call transparently falls
-    back to the dense launch — correct, traceable, just without the DMA
-    saving (same contract as ``apply_ops_sharded``'s fallback).
+    the auto-sized K cannot concretize; pass a static ``k_shards`` (an
+    upper bound on the distinct shards any 128-lane block straddles —
+    ``min(QBLK, S)`` is always safe) to keep the clustered launch inside a
+    trace, else the call falls back to the dense launch — correct, just
+    without the DMA saving.
+
+    Rebalance-aware: grid, K and the traversal bound are re-derived from
+    THIS state's static shapes on every call.  A padded fixed-ceiling
+    state (``core.rebalance_traced.pad_shards``) launches with the ceiling
+    as its static S; dead shards are never routed to, so the clustered
+    path's ``block_sids`` never name them (no DMA) and the dense grid
+    skips their compute via ``pl.when`` (their tile copy is the price of
+    the dense reference path).
+
+    An UNDERSIZED ``k_shards`` (a block straddles more shards than K)
+    raises eagerly (``cluster_queries``'s guard); under tracing that guard
+    cannot run, so lanes whose shard was dropped from ``block_sids`` are
+    clamped to a signalled MISS (``found=False``, ``NULL_VAL``, node -1)
+    — a conservative, detectable outcome, never a fabricated hit against
+    the wrong shard tile.  ``min(QBLK, S)`` is always a sufficient K.
     """
     if not fits_vmem(shl):
         raise ValueError(
@@ -263,9 +285,10 @@ def search_kernel_sharded(shl: ShardedSkipList, queries: jax.Array, *,
     q, B = _pad(queries.astype(jnp.int32))
     if cluster:
         try:
-            plan = cluster_queries(shl.boundaries, q)
+            plan = cluster_queries(shl.boundaries, q,
+                                   k_shards=min(k_shards, shl.n_shards))
         except jax.errors.ConcretizationTypeError:
-            cluster = False              # traced batch: dense launch
+            cluster = False              # traced batch, no static K: dense
     if cluster:
         if shl.foresight:
             node, ckey = foresight_traverse_clustered(
@@ -279,8 +302,23 @@ def search_kernel_sharded(shl: ShardedSkipList, queries: jax.Array, *,
                 max_steps=max_steps, interpret=interpret)
         node, ckey = node[plan.inv], ckey[plan.inv]   # unsort: bit-identical
         sid = plan.sid_sorted[plan.inv]
+        if isinstance(plan.ndist, jax.core.Tracer):
+            # traced explicit-K launch: cluster_queries' sufficiency guard
+            # could not run, so an undersized K silently drops shards from
+            # block_sids and those lanes' outputs are the k==0 init
+            # garbage.  A lane is served iff its shard made a slot; clamp
+            # the rest to a signalled miss.  (Eager plans skip this: the
+            # guard already proved every lane served.)
+            nblk, K = plan.block_sids.shape
+            sid_blk = plan.sid_sorted.reshape(nblk, QBLK)
+            served = jnp.any(
+                sid_blk[:, :, None] == plan.block_sids[:, None, :],
+                axis=-1).reshape(-1)[plan.inv]
+        else:
+            served = jnp.ones_like(q, jnp.bool_)
     else:
         sid = shd.route(shl.boundaries, q)
+        served = jnp.ones_like(q, jnp.bool_)
         if shl.foresight:
             node, ckey = foresight_traverse_sharded(
                 shl.shards.fused, sid, q, max_steps=max_steps,
@@ -290,18 +328,20 @@ def search_kernel_sharded(shl: ShardedSkipList, queries: jax.Array, *,
                 shl.shards.nxt, shl.shards.keys, sid, q,
                 max_steps=max_steps, interpret=interpret)
     node, ckey, sid = node[:B], ckey[:B], sid[:B]
-    found = ckey == queries.astype(jnp.int32)
+    served = served[:B]
+    found = (ckey == queries.astype(jnp.int32)) & served
     cap = shl.shard_capacity
     flat_vals = shl.shards.vals.reshape(-1)
-    gnode = sid * cap + node
-    vals = jnp.where(found, jnp.take(flat_vals, gnode), NULL_VAL)
+    gnode = jnp.where(served, sid * cap + node, -1)
+    vals = jnp.where(found, jnp.take(flat_vals, jnp.maximum(gnode, 0)),
+                     NULL_VAL)
     return KernelSearchResult(found, vals, gnode)
 
 
 def search_kernel(state: Union[SkipListState, ShardedSkipList],
                   queries: jax.Array, *, max_steps: int = 0,
-                  interpret: bool = True,
-                  cluster: bool = True) -> KernelSearchResult:
+                  interpret: bool = True, cluster: bool = True,
+                  k_shards: int = 0) -> KernelSearchResult:
     """Kernel-backed batched search on either variant; resolves found/vals.
 
     Auto-dispatch: a ``ShardedSkipList`` takes the sharded key-space path;
@@ -315,7 +355,8 @@ def search_kernel(state: Union[SkipListState, ShardedSkipList],
     """
     if isinstance(state, ShardedSkipList):
         return search_kernel_sharded(state, queries, max_steps=max_steps,
-                                     interpret=interpret, cluster=cluster)
+                                     interpret=interpret, cluster=cluster,
+                                     k_shards=k_shards)
     if not fits_vmem(state):
         raise ValueError(
             "search_kernel: monolithic table exceeds the VMEM budget "
@@ -337,9 +378,9 @@ def search_kernel(state: Union[SkipListState, ShardedSkipList],
 
 def search_kernel_float(state: Union[SkipListState, ShardedSkipList],
                         float_queries: jax.Array, *, max_steps: int = 0,
-                        interpret: bool = True,
-                        cluster: bool = True) -> KernelSearchResult:
+                        interpret: bool = True, cluster: bool = True,
+                        k_shards: int = 0) -> KernelSearchResult:
     """Float-keyed search (keys must have been encoded at build time)."""
     return search_kernel(state, encode_float_keys(float_queries),
                          max_steps=max_steps, interpret=interpret,
-                         cluster=cluster)
+                         cluster=cluster, k_shards=k_shards)

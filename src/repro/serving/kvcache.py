@@ -9,16 +9,27 @@ read/update workload the paper accelerates.  Lookups are batched foresight
 traversals; the variant (base / foresight / kernel) is selectable so the
 macrobenchmark can compare them under a realistic serving key distribution.
 
-The table is a ``core.sharded.ShardedSkipList`` held directly (the old
-oversized-monolith auto-reshard in ``kernels.ops.search_kernel`` is gone):
-it starts as ``n_shards`` empty key-range shards and, with ``rebalance``
-on, ``apply_ops_sharded`` splits/merges shards as sequences come and go —
-a seq-id-skewed allocation burst can no longer exhaust one shard's fixed
-capacity while its neighbours sit empty.
+The table is a ``core.sharded.ShardedSkipList`` held directly and, with
+``rebalance`` on (the default), built at a static ``max_shards`` ceiling
+(``empty_sharded`` at the ceiling — spare shards are dead ``KEY_MAX``-
+boundary slots).  The update path is ``jax.jit``-compiled: splits and
+merges run as the traced in-place edits of ``core.rebalance_traced``, so a
+seq-id-skewed allocation burst can no longer exhaust one shard's fixed
+capacity while its neighbours sit empty, and the compiled apply is traced
+ONCE at the ceiling no matter how many shards come and go (batch sizes are
+pow2-padded with no-op reads to bound shape variants).  The old eager-only
+caveat is gone: this is the production serving loop shape — rebalancing
+lives inside the jitted region.
+
+Composite keys must stay inside int31: ``alloc`` / ``lookup`` / ``release``
+validate ``seq_id < MAX_SEQS`` and ``block_id < 2**BLOCK_BITS`` and raise
+``ValueError`` on violation — out-of-range ids would wrap ``page_key``
+negative in int32 and collide with the ``KEY_MIN``/sentinel key space.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Tuple
 
 import jax
@@ -44,8 +55,10 @@ class PagedCacheConfig:
     levels: int = 16
     foresight: bool = True
     use_kernel: bool = False
-    n_shards: int = 1            # initial count; rebalancing may change it
+    n_shards: int = 1            # minimum shard count (kernel path may raise)
     rebalance: bool = True       # split/merge shards as the table evolves
+    max_shards: int = 0          # static ceiling for traced rebalancing
+                                 # (0 = auto: max(8, n_shards, kernel tiling))
     seed: int = 0
 
 
@@ -62,6 +75,10 @@ class PageTable:
             # size the partition so a full table ships fitting tiles
             n_shards = max(n_shards, kops.auto_shards(
                 cfg.n_pages, cfg.levels, cfg.foresight))
+        if cfg.rebalance:
+            # build AT the ceiling: spare shards are the dead slots the
+            # traced splits spend, and the jitted apply traces once there
+            n_shards = max(n_shards, cfg.max_shards or 8)
         if n_shards > 1:
             cap = shd.shard_capacity_for(cfg.n_pages, n_shards)
         else:
@@ -70,18 +87,48 @@ class PageTable:
             n_shards=n_shards, capacity=cap, levels=cfg.levels,
             foresight=cfg.foresight, seed=cfg.seed)
         self.free = list(range(cfg.n_pages - 1, -1, -1))
+        # one compiled apply at the shard ceiling; rebalance/seed are
+        # baked in statically, batch shapes pow2-padded by _apply.  The
+        # input index state is donated — _apply unconditionally replaces
+        # self.index with the result, so the old buffers (a full table at
+        # the ceiling) can be reused instead of held alive alongside it
+        self._jit_apply = jax.jit(
+            functools.partial(shd.apply_ops_sharded, rebalance=cfg.rebalance,
+                              seed=cfg.seed),
+            donate_argnums=(0,))
 
     def _apply(self, ops: jax.Array, keys: jax.Array, vals: jax.Array
                ) -> jax.Array:
-        self.index, results = shd.apply_ops_sharded(
-            self.index, ops, keys, vals, rebalance=self.cfg.rebalance)
-        return results
+        n = ops.shape[0]
+        pad = (1 if n == 0 else 1 << int(n - 1).bit_length()) - n
+        if pad:  # no-op reads of key 0: no state, RNG, or routing effect
+            ops = jnp.concatenate([ops, jnp.full((pad,), sl.OP_READ,
+                                                 jnp.int32)])
+            keys = jnp.concatenate([keys, jnp.zeros((pad,), jnp.int32)])
+            vals = jnp.concatenate([vals, jnp.zeros((pad,), jnp.int32)])
+        self.index, results = self._jit_apply(self.index, ops, keys, vals)
+        return results[:n]
+
+    def _validate_ids(self, seq_ids, block_ids) -> None:
+        seq = np.atleast_1d(np.asarray(seq_ids, np.int64))
+        blk = np.atleast_1d(np.asarray(block_ids, np.int64))
+        if seq.size and (seq.min() < 0 or seq.max() >= MAX_SEQS):
+            raise ValueError(
+                f"seq_id out of range [0, {MAX_SEQS}): got "
+                f"[{seq.min()}, {seq.max()}] — page_key would wrap negative "
+                "in int32 and collide with the sentinel key space")
+        if blk.size and (blk.min() < 0 or blk.max() >= (1 << BLOCK_BITS)):
+            raise ValueError(
+                f"block_id out of range [0, {1 << BLOCK_BITS}): got "
+                f"[{blk.min()}, {blk.max()}] — blocks past 2**BLOCK_BITS "
+                "alias the next sequence's key range")
 
     # -- allocation -----------------------------------------------------------
 
     def alloc(self, seq_ids: np.ndarray, block_ids: np.ndarray
               ) -> np.ndarray:
         """Allocate physical pages for (seq, block) pairs; returns pages."""
+        self._validate_ids(seq_ids, block_ids)
         n = len(seq_ids)
         if n > len(self.free):
             raise RuntimeError("KV page pool exhausted")
@@ -112,6 +159,7 @@ class PageTable:
     def lookup(self, seq_ids: np.ndarray, block_ids: np.ndarray
                ) -> Tuple[jax.Array, jax.Array]:
         """Batched page lookup -> (found, physical_pages)."""
+        self._validate_ids(seq_ids, block_ids)
         keys = jnp.asarray(page_key(seq_ids.astype(np.int64),
                                     block_ids.astype(np.int64))
                            .astype(np.int32))
@@ -122,7 +170,12 @@ class PageTable:
 
     def release(self, seq_id: int, n_blocks: int) -> int:
         """Free all pages of a finished sequence (ordered range delete)."""
+        if n_blocks > (1 << BLOCK_BITS):
+            raise ValueError(
+                f"n_blocks={n_blocks} exceeds the {1 << BLOCK_BITS}-block "
+                "per-sequence ceiling (2**BLOCK_BITS)")
         blocks = np.arange(n_blocks, dtype=np.int64)
+        self._validate_ids(seq_id, blocks)
         keys = page_key(np.int64(seq_id), blocks).astype(np.int32)
         found, pages = self.lookup(np.full(n_blocks, seq_id), blocks)
         ops = jnp.full((n_blocks,), sl.OP_DELETE, jnp.int32)

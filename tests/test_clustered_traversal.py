@@ -8,6 +8,8 @@ batches whose padded tail crosses block boundaries.  Also covers the
 segment-scoped ``apply_ops_sharded`` bounds and the traversal step-bound
 helper shared by all kernel wrappers.
 """
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -185,17 +187,23 @@ def test_apply_ops_sharded_segment_scoped_matches_monolithic():
     np.testing.assert_array_equal(np.asarray(v_s), np.asarray(v_m))
 
 
-def test_apply_ops_sharded_under_jit_falls_back_dense():
+def test_apply_ops_sharded_under_jit_keeps_segment_scan():
     """Traced segment widths can't concretize; the jitted call must still
-    produce identical results via the dense fallback."""
+    be bit-identical via the count-then-dispatch pass loop (the dense S x B
+    fallback is gone) — states AND results, any max_segment hint."""
     shl, keys, rng = _index(n=400, n_shards=4, levels=10)
     ops = jnp.asarray(rng.integers(0, 3, 64), jnp.int32)
     kk = jnp.asarray(rng.choice(keys, 64).astype(np.int32))
     eager = shd.apply_ops_sharded(shl, ops, kk, kk * 5)
-    jitted = jax.jit(shd.apply_ops_sharded)(shl, ops, kk, kk * 5)
-    np.testing.assert_array_equal(np.asarray(eager[1]), np.asarray(jitted[1]))
-    for a, b in zip(jax.tree.leaves(eager[0]), jax.tree.leaves(jitted[0])):
-        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for hint in (0, 8, 64):    # auto window, multi-pass, single-pass
+        jitted = jax.jit(functools.partial(shd.apply_ops_sharded,
+                                           max_segment=hint))(shl, ops, kk,
+                                                              kk * 5)
+        np.testing.assert_array_equal(np.asarray(eager[1]),
+                                      np.asarray(jitted[1]))
+        for a, b in zip(jax.tree.leaves(eager[0]),
+                        jax.tree.leaves(jitted[0])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 # ---------------------------------------------------------------------------
@@ -220,6 +228,55 @@ def test_search_kernel_sharded_traceable_under_jit():
     jitted = jax.jit(kops.search_kernel_sharded)(shl, q)
     for a, b in zip(eager, jitted):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_search_kernel_sharded_static_k_stays_clustered_under_jit():
+    """An explicit static k_shards keeps the scalar-prefetch clustered
+    launch inside a trace (no dense fallback) — bit-identical to eager,
+    including on a ceiling-padded state whose dead shards must never be
+    DMA'd or routed to."""
+    from repro.core import rebalance_traced as rbt
+    shl, keys, rng = _index(n=400, n_shards=4, levels=10)
+    pad = rbt.pad_shards(shl, 8)
+    q = jnp.asarray(rng.choice(keys, 64).astype(np.int32))
+    eager = kops.search_kernel_sharded(pad, q)
+    jitted = jax.jit(functools.partial(kops.search_kernel_sharded,
+                                       k_shards=4))(pad, q)
+    for a, b in zip(eager, jitted):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    f, v = shd.search_sharded(shl, q)              # unpadded reference
+    np.testing.assert_array_equal(np.asarray(jitted.found), np.asarray(f))
+    np.testing.assert_array_equal(np.asarray(jitted.vals), np.asarray(v))
+
+
+def test_undersized_k_shards_raises_eager_and_misses_loudly_traced():
+    """k_shards below a block's distinct-shard straddle must raise eagerly
+    (cluster_queries' guard) and, under tracing where that guard cannot
+    run, clamp the dropped lanes to a signalled miss (found=False, node
+    -1) — NEVER a fabricated hit against the wrong shard tile."""
+    shl, keys, rng = _index(n=1200, n_shards=8, levels=10)
+    sids = np.asarray(shd.route(shl.boundaries, jnp.asarray(keys)))
+    picks = np.sort(np.array([keys[sids == s][0] for s in range(8)],
+                             np.int32))             # one block, 8 shards
+    q = jnp.asarray(picks)
+    with pytest.raises(ValueError, match="k_shards"):
+        kops.search_kernel_sharded(shl, q, k_shards=2)
+    r = jax.jit(functools.partial(kops.search_kernel_sharded,
+                                  k_shards=2))(shl, q)
+    found = np.asarray(r.found)
+    vals = np.asarray(r.vals)
+    node = np.asarray(r.node)
+    assert not found.all() and found.any()         # some lanes dropped
+    # every reported hit is a REAL hit with the right value...
+    np.testing.assert_array_equal(vals[found], picks[found] * 3)
+    # ...and every dropped lane is a detectable miss, not garbage
+    assert (node[~found] == -1).all()
+    assert (vals[~found] == int(sl.NULL_VAL)).all()
+    # a sufficient K recovers every lane bit-identically to the reference
+    ok = jax.jit(functools.partial(kops.search_kernel_sharded,
+                                   k_shards=8))(shl, q)
+    assert bool(jnp.all(ok.found))
+    np.testing.assert_array_equal(np.asarray(ok.vals), picks * 3)
 
 
 def test_search_kernel_sharded_after_rebalance_shard_count_change():

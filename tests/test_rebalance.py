@@ -155,23 +155,37 @@ def test_rebalance_driver_watermarks():
     _assert_matches_oracle(shl4, oracle, rng)
 
 
-def test_apply_ops_rebalance_under_jit_degrades_to_fixed():
-    """rebalance=True inside a traced computation must silently fall back
-    to fixed boundaries (host-side passes cannot concretize occupancy) —
-    not crash with a tracer-conversion error."""
-    shl, oracle, keys, rng = _build(n=40, n_shards=4, capacity=32)
-    kk = rng.integers(0, SPAN, 16).astype(np.int32)
+def test_apply_ops_rebalance_under_jit_stays_active():
+    """rebalance=True inside a traced computation no longer degrades to
+    fixed boundaries: it dispatches to core.rebalance_traced and splits in
+    place at the state's static shard ceiling.  A burst that would exhaust
+    one shard of the padded state must complete with every insert accepted
+    and results identical to the eager (host-loop) rebalance."""
+    from repro.core import rebalance_traced as rbt
+    shl, oracle, keys, rng = _build(n=40, n_shards=4, capacity=16)
+    padded = rbt.pad_shards(shl, 16)
+    # hammer shard 0's key range hard enough to need guard splits
+    hot = int(np.asarray(shl.boundaries)[1])
+    kk = np.setdiff1d(np.unique(rng.integers(0, hot, 24).astype(np.int32)),
+                      keys)                        # all genuinely new
     ops = jnp.full((kk.size,), sl.OP_INSERT, jnp.int32)
 
     @jax.jit
     def step(state, o, k, v):
         return shd.apply_ops_sharded(state, o, k, v, rebalance=True)
 
-    shl_j, res_j = step(shl, ops, jnp.asarray(kk), jnp.asarray(kk * 2))
+    shl_j, res_j = step(padded, ops, jnp.asarray(kk), jnp.asarray(kk * 2))
     shl_e, res_e = shd.apply_ops_sharded(shl, ops, jnp.asarray(kk),
-                                         jnp.asarray(kk * 2))
-    assert shl_j.n_shards == shl.n_shards          # boundaries stayed fixed
+                                         jnp.asarray(kk * 2),
+                                         rebalance=True)
+    assert bool(jnp.all(res_j == 1))               # no capacity failures
     np.testing.assert_array_equal(np.asarray(res_j), np.asarray(res_e))
+    assert shl_j.n_shards == padded.n_shards       # static shape: ceiling
+    assert int(rbt.live_shard_count(shl_j)) > int(rbt.live_shard_count(padded))
+    for k in kk:
+        oracle.insert(int(k), int(k) * 2)
+    assert bool(shd.check_sharded_invariant(shl_j, expect_n=len(oracle.d)))
+    _assert_matches_oracle(shl_j, oracle, rng)
     f_j, v_j = shd.search_sharded(shl_j, jnp.asarray(kk))
     f_e, v_e = shd.search_sharded(shl_e, jnp.asarray(kk))
     np.testing.assert_array_equal(np.asarray(f_j), np.asarray(f_e))

@@ -61,6 +61,50 @@ def test_page_table_capacity_failure_raises_and_reclaims():
     assert bool(jnp.all(found))
 
 
+def test_page_table_validates_id_ranges():
+    """Out-of-range ids would wrap page_key negative in int32 and collide
+    with the KEY_MIN/sentinel space — alloc/lookup/release must raise
+    ValueError instead of corrupting the table (ISSUE 5 satellite)."""
+    from repro.serving.kvcache import BLOCK_BITS, MAX_SEQS
+    pt = PageTable(PagedCacheConfig(n_pages=64))
+    # boundary ids are legal and must not collide with sentinels
+    pt.alloc(np.array([MAX_SEQS - 1]), np.array([(1 << BLOCK_BITS) - 1]))
+    found, _ = pt.lookup(np.array([MAX_SEQS - 1]),
+                         np.array([(1 << BLOCK_BITS) - 1]))
+    assert bool(found[0])
+    n0 = pt.n_live
+    with pytest.raises(ValueError, match="seq_id out of range"):
+        pt.alloc(np.array([MAX_SEQS]), np.array([0]))
+    with pytest.raises(ValueError, match="seq_id out of range"):
+        pt.alloc(np.array([-1]), np.array([0]))
+    with pytest.raises(ValueError, match="block_id out of range"):
+        pt.alloc(np.array([1]), np.array([1 << BLOCK_BITS]))
+    with pytest.raises(ValueError, match="block_id out of range"):
+        pt.lookup(np.array([1]), np.array([-2]))
+    with pytest.raises(ValueError, match="seq_id out of range"):
+        pt.release(MAX_SEQS, 1)
+    with pytest.raises(ValueError, match="n_blocks"):
+        pt.release(1, (1 << BLOCK_BITS) + 1)
+    assert pt.n_live == n0                         # nothing leaked through
+    assert len(pt.free) == 64 - n0                 # no page lost to a raise
+
+
+def test_page_table_apply_traces_once_at_ceiling():
+    """The jitted serving apply path must not retrace as shards split:
+    pow2 batch padding + the static ceiling keep one compiled trace per
+    batch-size bucket."""
+    pt = PageTable(PagedCacheConfig(n_pages=256))
+    rng = np.random.default_rng(0)
+    S0 = pt.index.n_shards
+    for s in range(6):
+        blocks = np.arange(3 + (s % 2), dtype=np.int64)  # sizes 3/4: one pad bucket
+        pt.alloc(np.full(blocks.size, s), blocks)
+    assert pt.index.n_shards == S0                 # static shape held
+    assert pt._jit_apply._cache_size() == 1
+    found, _ = pt.lookup(rng.integers(0, 6, 8), rng.integers(0, 3, 8))
+    assert bool(jnp.all(found))
+
+
 def test_page_table_kernel_path_sizes_shards_for_vmem():
     """use_kernel on a big pool must partition so the per-shard tile fits
     the VMEM budget — the old oversized-monolith auto-reshard is gone, so

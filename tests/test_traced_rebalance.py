@@ -1,0 +1,333 @@
+"""jit-equivalence suite: traced rebalancing at a static shard ceiling.
+
+The contract under test (ISSUE 5 tentpole): ``apply_ops_sharded`` must
+behave identically eager and under ``jax.jit`` —
+
+* ``rebalance=False``: BIT-identical, leaves and results, on uniform and
+  Zipf op streams (the traced count-then-dispatch segment scan replays the
+  exact per-shard op sequences of the eager single-window scan);
+* ``rebalance=True``: the jitted call dispatches to the fixed-shape traced
+  drivers (``core.rebalance_traced``) on a ceiling-padded state — the
+  Zipf(1.2) acceptance stream from ``BENCH_rebalance.json`` completes with
+  0 failed inserts, per-op results bit-identical to the eager host-loop
+  rebalance AND to a monolithic index, ``check_sharded_invariant`` holding
+  with the live count conserved after every traced split/merge, and ONE
+  compiled trace at the ceiling across the whole stream (no recompile per
+  shard-count change);
+* the traced structural primitives themselves (pad / split / merge /
+  watermark / guard) preserve contents exactly.
+
+Satellite regressions ride along: the RNG seed threads into guard splits
+(differently-seeded streams grow different towers), and eager host-pass
+failure warns instead of silently degrading.
+"""
+import functools
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import rebalance_traced as rbt
+from repro.core import sharded as shd
+from repro.core import skiplist as sl
+from repro.core.oracle import DictOracle
+# plain module import (pytest puts tests/ itself on sys.path — there is no
+# tests package, so `from tests.test_rebalance ...` breaks bare `pytest`)
+from test_rebalance import (SPAN, _assert_matches_oracle, _build,
+                            _zipf_stream)
+
+
+def _leaves_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# rebalance=False: traced segment scan bit-identical to the eager scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("zipf", [False, True], ids=["uniform", "zipf"])
+def test_jit_equivalence_rebalance_off_bitwise(zipf):
+    shl, oracle, keys, rng = _build(n=60, n_shards=4, capacity=64, seed=3)
+    jitted = jax.jit(shd.apply_ops_sharded)
+    eager_st = jit_st = shl
+    for r in range(3):
+        if zipf:
+            hot = int(rng.integers(0, SPAN - 4096))
+            kk = (hot + (rng.zipf(1.2, 48) - 1) % 4096).astype(np.int32)
+        else:
+            kk = rng.integers(0, SPAN, 48).astype(np.int32)
+        ops = jnp.asarray(rng.integers(0, 3, 48), jnp.int32)
+        vv = jnp.asarray((kk * 7 + r).astype(np.int32))
+        kk = jnp.asarray(kk)
+        eager_st, res_e = shd.apply_ops_sharded(eager_st, ops, kk, vv)
+        jit_st, res_j = jitted(jit_st, ops, kk, vv)
+        np.testing.assert_array_equal(np.asarray(res_e), np.asarray(res_j))
+        _leaves_equal(eager_st, jit_st)
+    assert jitted._cache_size() == 1
+
+
+# ---------------------------------------------------------------------------
+# rebalance=True: the BENCH_rebalance Zipf(1.2) acceptance stream under jit
+# ---------------------------------------------------------------------------
+
+def test_jit_rebalance_zipf_acceptance_single_trace():
+    """The acceptance criterion verbatim: jit-wrapped
+    apply_ops_sharded(..., rebalance=True) completes the Zipf(1.2) stream
+    (BENCH_rebalance.json parameters) with 0 failed inserts, bit-identical
+    results to the eager rebalance path and a monolithic oracle, and one
+    trace at the max_shards ceiling."""
+    shl0, oracle0, keys, rng = _build(n=48, n_shards=4, capacity=16)
+    padded = rbt.pad_shards(shl0, 32)
+    hot_lo = int(keys[2])
+    batches = list(_zipf_stream(np.random.default_rng(7), n_batches=6,
+                                hot_lo=hot_lo))
+
+    jitted = jax.jit(functools.partial(shd.apply_ops_sharded,
+                                       rebalance=True))
+    mono = sl.build(jnp.asarray(keys), jnp.asarray(keys * 3),
+                    capacity=1024, levels=8, seed=0)
+    oracle = DictOracle()
+    oracle.d.update(oracle0.d)
+    st_j, st_e = padded, shl0
+    for kk in batches:
+        ops = jnp.full((kk.size,), sl.OP_INSERT, jnp.int32)
+        kk_j, vv_j = jnp.asarray(kk), jnp.asarray(kk * 2)
+        st_j, res_j = jitted(st_j, ops, kk_j, vv_j)
+        st_e, res_e = shd.apply_ops_sharded(st_e, ops, kk_j, vv_j,
+                                            rebalance=True)
+        mono, res_m = sl.apply_ops(mono, ops, kk_j, vv_j)
+        # bit-identical results: traced == eager == monolithic
+        np.testing.assert_array_equal(np.asarray(res_j), np.asarray(res_e))
+        np.testing.assert_array_equal(np.asarray(res_j), np.asarray(res_m))
+        for k in kk:
+            oracle.insert(int(k), int(k) * 2)
+        # conservation + partition invariants after every traced batch
+        assert bool(shd.check_sharded_invariant(st_j,
+                                                expect_n=len(oracle.d)))
+        assert st_j.n_shards == padded.n_shards    # shape pinned at ceiling
+    # 0 failed inserts: every distinct new key is present with its value
+    new_keys = np.unique(np.concatenate(batches))
+    f, v = shd.search_sharded(st_j, jnp.asarray(new_keys))
+    assert bool(jnp.all(f))
+    np.testing.assert_array_equal(np.asarray(v), new_keys * 2)
+    # splits actually happened in-trace, and exactly one trace was compiled
+    assert int(rbt.live_shard_count(st_j)) > int(rbt.live_shard_count(padded))
+    assert jitted._cache_size() == 1, \
+        "shard-count changes must not retrace the jitted apply"
+    # final searches bit-identical to the monolithic index + oracle
+    probe = jnp.asarray(np.concatenate(
+        [keys, new_keys, rng.integers(0, SPAN, 64)]).astype(np.int32))
+    f_m, v_m = sl.search_fast(mono, probe)
+    f_j, v_j = shd.search_sharded(st_j, probe)
+    np.testing.assert_array_equal(np.asarray(f_j), np.asarray(f_m))
+    np.testing.assert_array_equal(np.asarray(v_j), np.asarray(v_m))
+    _assert_matches_oracle(st_j, oracle, rng)
+
+
+def test_jit_rebalance_mixed_stream_matches_eager():
+    """Mixed insert/read/delete streams (uniform + Zipf alternating):
+    traced and eager rebalance agree on every result flag and search, with
+    the invariant + conservation checked after each batch."""
+    shl0, oracle, keys, rng = _build(n=24, n_shards=4, capacity=16, seed=5)
+    padded = rbt.pad_shards(shl0, 16)
+    jitted = jax.jit(functools.partial(shd.apply_ops_sharded,
+                                       rebalance=True))
+    st_j, st_e = padded, shl0
+    for r in range(4):
+        if r % 2:
+            hot = int(rng.integers(0, SPAN - 4096))
+            kk = (hot + (rng.zipf(1.2, 36) - 1) % 4096).astype(np.int32)
+        else:
+            kk = rng.integers(0, SPAN, 36).astype(np.int32)
+        ops = rng.integers(0, 3, 36).astype(np.int32)
+        vv = (kk * 7 + r).astype(np.int32)
+        expected = []
+        for o, k, v in zip(ops, kk, vv):
+            if o == sl.OP_INSERT:
+                expected.append(int(oracle.insert(int(k), int(v))))
+            elif o == sl.OP_DELETE:
+                expected.append(int(oracle.delete(int(k))))
+            else:
+                expected.append(int(oracle.search(int(k))[0]))
+        st_j, res_j = jitted(st_j, jnp.asarray(ops), jnp.asarray(kk),
+                             jnp.asarray(vv))
+        st_e, res_e = shd.apply_ops_sharded(st_e, jnp.asarray(ops),
+                                            jnp.asarray(kk),
+                                            jnp.asarray(vv), rebalance=True)
+        assert np.asarray(res_j).tolist() == expected
+        np.testing.assert_array_equal(np.asarray(res_j), np.asarray(res_e))
+        assert bool(shd.check_sharded_invariant(st_j,
+                                                expect_n=len(oracle.d)))
+        _assert_matches_oracle(st_j, oracle, rng)
+    assert jitted._cache_size() == 1
+
+
+# ---------------------------------------------------------------------------
+# Traced structural primitives: pad / split / merge preserve contents
+# ---------------------------------------------------------------------------
+
+def test_pad_shards_is_search_invisible():
+    shl, oracle, keys, rng = _build(n=60, n_shards=4)
+    padded = rbt.pad_shards(shl, 12)
+    assert padded.n_shards == 12
+    assert int(rbt.live_shard_count(padded)) <= 4
+    assert bool(shd.check_sharded_invariant(padded, expect_n=len(oracle.d)))
+    _assert_matches_oracle(padded, oracle, rng)
+    with pytest.raises(ValueError, match="below current"):
+        rbt.pad_shards(padded, 8)
+    assert rbt.pad_shards(shl, 4) is shl           # no-op at same size
+
+
+def test_traced_split_merge_preserve_contents_under_jit():
+    shl, oracle, keys, rng = _build(n=60, n_shards=4)
+    padded = rbt.pad_shards(shl, 8)
+    n0 = len(oracle.d)
+    b = np.asarray(shl.boundaries)
+    at = int(b[1]) + 1                             # just inside shard 1
+    split = jax.jit(rbt.split_shard_traced)(padded, jnp.int32(1),
+                                            jnp.int32(at))
+    assert split.n_shards == 8                     # fixed shape
+    assert int(np.asarray(split.boundaries)[2]) == at
+    assert bool(shd.check_sharded_invariant(split, expect_n=n0))
+    _assert_matches_oracle(split, oracle, rng)
+    merged = jax.jit(rbt.merge_shards_traced)(split, jnp.int32(1))
+    assert merged.n_shards == 8
+    assert bool(shd.check_sharded_invariant(merged, expect_n=n0))
+    np.testing.assert_array_equal(np.asarray(merged.boundaries)[:4], b)
+    _assert_matches_oracle(merged, oracle, rng)
+
+
+def test_traced_watermark_matches_eager_semantics():
+    """Split every shard above high water, then merge underfull live
+    neighbours — same watermark semantics as the eager driver, contents
+    exactly preserved, all inside one jit."""
+    shl, oracle, keys, rng = _build(n=100, n_shards=2, capacity=64)
+    padded = rbt.pad_shards(shl, 8)                # 50/50 > 0.75 * 62
+    st, stats = jax.jit(rbt.watermark_rebalance_traced)(padded)
+    assert int(stats.splits) >= 1
+    usable = st.shard_capacity - 2
+    ns = np.asarray(st.shards.n)
+    assert np.all(ns <= 0.75 * usable)
+    assert bool(shd.check_sharded_invariant(st, expect_n=len(oracle.d)))
+    _assert_matches_oracle(st, oracle, rng)
+    # deleting most keys must merge live neighbours back (traced merges)
+    drop = keys[: 80]
+    ops = jnp.full((drop.size,), sl.OP_DELETE, jnp.int32)
+    st2, res = jax.jit(functools.partial(shd.apply_ops_sharded,
+                                         rebalance=True))(
+        st, ops, jnp.asarray(drop), jnp.zeros(drop.size, jnp.int32))
+    assert bool(jnp.all(res == 1))
+    for k in drop:
+        oracle.delete(int(k))
+    assert int(rbt.live_shard_count(st2)) < int(rbt.live_shard_count(st))
+    assert bool(shd.check_sharded_invariant(st2, expect_n=len(oracle.d)))
+    _assert_matches_oracle(st2, oracle, rng)
+
+
+def test_eager_rebalance_preserves_padded_ceiling():
+    """An EAGER rebalance=True apply (or a direct rebalance()) on a
+    ceiling-padded state must use the in-place drivers too: the host loop
+    would merge the dead slots away / grow the axis past the ceiling,
+    silently breaking the next jitted call's one-trace contract."""
+    shl, oracle, keys, rng = _build(n=48, n_shards=4, capacity=16)
+    padded = rbt.pad_shards(shl, 16)
+    kk = rng.integers(0, SPAN, 8).astype(np.int32)
+    ops = jnp.full((kk.size,), sl.OP_INSERT, jnp.int32)
+    out, _ = shd.apply_ops_sharded(padded, ops, jnp.asarray(kk),
+                                   jnp.asarray(kk * 2), rebalance=True)
+    assert out.n_shards == 16                      # ceiling held, eagerly
+    out2, _ = shd.rebalance(padded)                # public API too
+    assert out2.n_shards == 16
+    live = int(rbt.live_shard_count(out2))
+    b = np.asarray(out2.boundaries).astype(np.int64)
+    assert (b[live:] == int(sl.KEY_MAX)).all()     # dead suffix intact
+    assert bool(shd.check_sharded_invariant(out2, expect_n=len(oracle.d)))
+    _assert_matches_oracle(out2, oracle, rng)
+
+
+# ---------------------------------------------------------------------------
+# Satellite regressions: seed threading + loud (not silent) degradation
+# ---------------------------------------------------------------------------
+
+def _guard_split_burst(seed):
+    """A burst that forces exhaustion-guard splits, applied with ``seed``."""
+    shl, oracle, keys, rng = _build(n=40, n_shards=4, capacity=16)
+    hot = int(np.asarray(shl.boundaries)[1])
+    kk = np.setdiff1d(
+        np.unique(np.random.default_rng(11).integers(0, hot, 24)
+                  .astype(np.int32)), keys)
+    ops = jnp.full((kk.size,), sl.OP_INSERT, jnp.int32)
+    out, res = shd.apply_ops_sharded(shl, ops, jnp.asarray(kk),
+                                     jnp.asarray(kk * 2), rebalance=True,
+                                     seed=seed)
+    assert bool(jnp.all(res == 1))
+    assert out.n_shards > shl.n_shards             # guard actually split
+    return out, kk
+
+
+def test_guard_splits_thread_caller_seed():
+    """Regression (ISSUE 5 satellite): apply_ops_sharded used to drop the
+    caller's seed on the guard path, so every batch resampled towers with
+    seed 0.  Two differently-seeded replays of the same stream must now
+    produce different tower layouts — while agreeing on every search."""
+    out_a, kk = _guard_split_burst(seed=0)
+    out_b, _ = _guard_split_burst(seed=1234)
+    assert out_a.n_shards == out_b.n_shards        # same split decisions
+    ha = np.asarray(out_a.shards.height)
+    hb = np.asarray(out_b.shards.height)
+    assert (ha != hb).any(), "seed did not reach the guard-split rebuilds"
+    for out in (out_a, out_b):
+        f, v = shd.search_sharded(out, jnp.asarray(kk))
+        assert bool(jnp.all(f))
+        np.testing.assert_array_equal(np.asarray(v), kk * 2)
+
+
+def test_traced_guard_threads_seed_under_jit():
+    shl, oracle, keys, rng = _build(n=40, n_shards=4, capacity=16)
+    padded = rbt.pad_shards(shl, 16)
+    hot = int(np.asarray(shl.boundaries)[1])
+    kk = np.setdiff1d(np.unique(rng.integers(0, hot, 24).astype(np.int32)),
+                      keys)
+    ops = jnp.full((kk.size,), sl.OP_INSERT, jnp.int32)
+    step = jax.jit(functools.partial(shd.apply_ops_sharded, rebalance=True))
+    outs = []
+    for seed in (0, 1234):                         # traced seed: no retrace
+        out, res = step(padded, ops, jnp.asarray(kk), jnp.asarray(kk * 2),
+                        seed=jnp.int32(seed))
+        assert bool(jnp.all(res == 1))
+        outs.append(out)
+    assert step._cache_size() == 1
+    ha = np.asarray(outs[0].shards.height)
+    hb = np.asarray(outs[1].shards.height)
+    assert (ha != hb).any()
+    for out in outs:
+        f, v = shd.search_sharded(out, jnp.asarray(kk))
+        assert bool(jnp.all(f))
+        np.testing.assert_array_equal(np.asarray(v), kk * 2)
+
+
+def test_eager_host_pass_failure_warns_not_silent(monkeypatch):
+    """Regression (ISSUE 5 satellite): an eager host-pass JAXTypeError used
+    to flip rebalance off silently; now it must emit a RuntimeWarning."""
+    shl, oracle, keys, rng = _build(n=24, n_shards=4, capacity=16)
+    kk = rng.integers(0, SPAN, 8).astype(np.int32)
+    ops = jnp.full((kk.size,), sl.OP_INSERT, jnp.int32)
+
+    def boom(*a, **k):
+        raise jax.errors.JAXTypeError("synthetic tracer leak")
+
+    monkeypatch.setattr(shd, "_exhaustion_guard", boom)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        out, res = shd.apply_ops_sharded(shl, ops, jnp.asarray(kk),
+                                         jnp.asarray(kk * 2),
+                                         rebalance=True)
+    assert any(issubclass(w.category, RuntimeWarning)
+               and "FIXED boundaries" in str(w.message) for w in caught), \
+        "eager rebalance fallback must warn, never degrade silently"
+    assert out.n_shards == shl.n_shards            # fixed-boundary fallback
