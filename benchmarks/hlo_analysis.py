@@ -209,26 +209,58 @@ def conv_flops(op: Op, comp: Computation) -> int:
     return 2 * math.prod(out_dims) * math.prod(k_dims[1:])
 
 
-@dataclasses.dataclass
-class Cost:
-    flops: float = 0.0
-    bytes: float = 0.0
-    coll_bytes: float = 0.0
-    coll_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+try:
+    from repro.analysis.walker import (ALL_FIELDS, FIELD_COLL, FIELD_FLOPS,
+                                       Cost, CostGraph, Edge)
+except ImportError:                      # run outside PYTHONPATH=src
+    import pathlib
+    import sys as _sys
+    _sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]
+                            / "src"))
+    from repro.analysis.walker import (ALL_FIELDS, FIELD_COLL, FIELD_FLOPS,
+                                       Cost, CostGraph, Edge)
+
+#: fusion bodies are on-chip: only flops and collectives cross the boundary
+_FUSION_FIELDS = frozenset((FIELD_FLOPS, FIELD_COLL))
 
 
-class Analyzer:
+class Analyzer(CostGraph):
+    """HLO instantiation of the shared ``CostGraph`` walker.
+
+    The traversal engine (memoized bottom-up accumulation, trip-count
+    multipliers, worst-case-branch groups, root detection) lives in
+    ``repro.analysis.walker``; this class only supplies the HLO facts:
+    which computations an op calls (``node_edges``) and what one
+    computation costs locally (``local_cost``).  Context tag ``"fusion"``
+    marks a computation entered as a fusion body — its interior traffic is
+    on-chip, so no byte accounting.
+    """
+
     def __init__(self, hlo_text: str):
+        super().__init__()
         self.comps = parse_hlo(hlo_text)
-        self._memo: Dict[str, Cost] = {}
         # computations reached as fusion bodies: on-chip, no byte accounting
         self.fusion_bodies = set()
+        # every computation referenced anywhere (incl. collectives'
+        # to_apply reducers, which are never traversed as cost children)
+        self._referenced = set()
         for comp in self.comps.values():
             for op in comp.ops:
-                if op.opcode in ("fusion",):
+                if op.opcode == "fusion":
                     m = CALLS_RE.search(op.rest)
                     if m:
                         self.fusion_bodies.add(m.group(1))
+                for rx in (CALLS_RE, TO_APPLY_RE):
+                    m = rx.search(op.rest)
+                    if m:
+                        self._referenced.add(m.group(1))
+                m = COND_BODY_RE.search(op.rest)
+                if m:
+                    self._referenced.update(m.groups())
+                m = BRANCHES_RE.search(op.rest)
+                if m:
+                    self._referenced.update(
+                        re.findall(r"%?([\w.\-]+)", m.group(1)))
 
     def trip_count(self, cond_name: str) -> int:
         cond = self.comps.get(cond_name)
@@ -241,56 +273,53 @@ class Analyzer:
         # jax scan cond: iter < N -> take the max plausible constant
         return max(consts) if consts else 1
 
-    def cost(self, comp_name: str, as_fusion: bool = False) -> Cost:
-        key = f"{comp_name}|{as_fusion}"
-        if key in self._memo:
-            return self._memo[key]
-        comp = self.comps.get(comp_name)
-        c = Cost(coll_by_kind={})
+    # -- CostGraph surface --------------------------------------------------
+    def node_names(self):
+        return list(self.comps)
+
+    def node_edges(self, name: str, ctx: str = "") -> List[Edge]:
+        comp = self.comps.get(name)
+        if comp is None:
+            return []
+        edges: List[Edge] = []
+        for op in comp.ops:
+            if op.opcode == "fusion":
+                m = CALLS_RE.search(op.rest)
+                if m:
+                    edges.append(Edge((m.group(1),),
+                                      fields=_FUSION_FIELDS))
+            elif op.opcode == "while":
+                m = COND_BODY_RE.search(op.rest)
+                if m:
+                    edges.append(Edge((m.group(2),),
+                                      mult=self.trip_count(m.group(1))))
+            elif op.opcode == "conditional":
+                m = BRANCHES_RE.search(op.rest)
+                if m:
+                    kids = tuple(re.findall(r"%?([\w.\-]+)", m.group(1)))
+                    if kids:
+                        edges.append(Edge(kids))   # worst-case branch
+            elif op.opcode in ("call", "async-start"):
+                m = TO_APPLY_RE.search(op.rest) or CALLS_RE.search(op.rest)
+                if m:
+                    edges.append(Edge((m.group(1),)))
+        return edges
+
+    def child_ctx(self, parent: str, child: str, ctx: str,
+                  edge: Edge) -> str:
+        return "fusion" if edge.fields is _FUSION_FIELDS else ""
+
+    def local_cost(self, name: str, ctx: str = "") -> Cost:
+        comp = self.comps.get(name)
+        c = Cost()
         if comp is None:
             return c
+        as_fusion = ctx == "fusion"
         for op in comp.ops:
-            # flops
             if op.opcode == "dot":
                 c.flops += dot_flops(op, comp)
             elif op.opcode == "convolution":
                 c.flops += conv_flops(op, comp)
-            # children
-            if op.opcode == "fusion":
-                m = CALLS_RE.search(op.rest)
-                if m:
-                    child = self.cost(m.group(1), as_fusion=True)
-                    c.flops += child.flops
-                    c.coll_bytes += child.coll_bytes
-            elif op.opcode == "while":
-                m = COND_BODY_RE.search(op.rest)
-                if m:
-                    trips = self.trip_count(m.group(1))
-                    body = self.cost(m.group(2))
-                    c.flops += trips * body.flops
-                    c.bytes += trips * body.bytes
-                    c.coll_bytes += trips * body.coll_bytes
-                    for k, v in body.coll_by_kind.items():
-                        c.coll_by_kind[k] = (c.coll_by_kind.get(k, 0)
-                                             + trips * v)
-            elif op.opcode == "conditional":
-                m = BRANCHES_RE.search(op.rest)
-                if m:
-                    kids = re.findall(r"%?([\w.\-]+)", m.group(1))
-                    if kids:
-                        costs = [self.cost(k) for k in kids]
-                        # worst-case branch
-                        best = max(costs, key=lambda x: x.flops + x.bytes)
-                        c.flops += best.flops
-                        c.bytes += best.bytes
-                        c.coll_bytes += best.coll_bytes
-            elif op.opcode in ("call", "async-start"):
-                m = TO_APPLY_RE.search(op.rest) or CALLS_RE.search(op.rest)
-                if m:
-                    child = self.cost(m.group(1))
-                    c.flops += child.flops
-                    c.bytes += child.bytes
-                    c.coll_bytes += child.coll_bytes
             # collectives (result bytes; ~operand bytes for ar/rs semantics)
             base = op.opcode.replace("-start", "")
             if base in COLLECTIVES:
@@ -308,39 +337,14 @@ class Analyzer:
                         _, bb = shape_elems_bytes(t)
                         ob += bb
                 c.bytes += rb + ob
-        self._memo[key] = c
         return c
 
+    def roots(self) -> List[str]:
+        # entry = the computation no other computation references
+        return [n for n in self.comps if n not in self._referenced]
+
     def entry_cost(self) -> Cost:
-        for name, comp in self.comps.items():
-            if any(op.opcode == "ROOT" for op in comp.ops):
-                pass
-        # entry = the computation that is not called by anyone
-        called = set(self.fusion_bodies)
-        for comp in self.comps.values():
-            for op in comp.ops:
-                m = COND_BODY_RE.search(op.rest)
-                if m:
-                    called.update(m.groups())
-                m2 = TO_APPLY_RE.search(op.rest)
-                if m2:
-                    called.add(m2.group(1))
-                m3 = BRANCHES_RE.search(op.rest)
-                if m3:
-                    called.update(re.findall(r"%?([\w.\-]+)", m3.group(1)))
-                m4 = CALLS_RE.search(op.rest)
-                if m4:
-                    called.add(m4.group(1))
-        roots = [n for n in self.comps if n not in called]
-        total = Cost(coll_by_kind={})
-        for r in roots:
-            c = self.cost(r)
-            total.flops += c.flops
-            total.bytes += c.bytes
-            total.coll_bytes += c.coll_bytes
-            for k, v in c.coll_by_kind.items():
-                total.coll_by_kind[k] = total.coll_by_kind.get(k, 0) + v
-        return total
+        return self.total_cost()
 
 
 def analyze(hlo_text: str) -> Dict[str, float]:

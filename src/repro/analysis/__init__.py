@@ -1,0 +1,27 @@
+"""Trace-safety & kernel-budget static analysis suite.
+
+Three cooperating passes over the repo (see ANALYSIS.md for the rule
+vocabulary and workflow):
+
+* :mod:`repro.analysis.lint` — pure-AST rules (host escapes in traced-
+  reachable code, silent except-and-degrade, interpret plumbing);
+* :mod:`repro.analysis.trace_audit` — jaxpr-level audit of the public
+  jitted entry points (host callbacks, dynamic shapes, retrace counts);
+* :mod:`repro.analysis.kernel_budget` — BlockSpec-level budget/aliasing
+  checks and THE canonical VMEM-footprint estimator (``tile_bytes``)
+  shared by builders and checkers.
+
+CLI: ``PYTHONPATH=src python -m repro.analysis --baseline
+analysis_baseline.json`` — exit 0 iff no finding exceeds the baseline.
+"""
+from repro.analysis.findings import RULES, Finding, sort_findings
+from repro.analysis.kernel_budget import (TOTAL_VMEM_BYTES,
+                                          VMEM_BUDGET_BYTES,
+                                          max_capacity_under_budget,
+                                          tile_bytes)
+
+__all__ = [
+    "RULES", "Finding", "sort_findings",
+    "TOTAL_VMEM_BYTES", "VMEM_BUDGET_BYTES",
+    "max_capacity_under_budget", "tile_bytes",
+]

@@ -1,0 +1,110 @@
+"""CLI: ``python -m repro.analysis`` — run all passes, gate on new findings.
+
+Exit status 0 iff every unsuppressed finding fits the baseline budget.
+Passes can be selected (``--passes lint,trace,budget``) — CI runs all
+three; the pure-AST lint needs no jax and is near-instant for local use.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from repro.analysis.baseline import (apply_baseline, load_baseline,
+                                     write_baseline)
+from repro.analysis.findings import sort_findings
+from repro.analysis.report import build_report, write_report
+
+ALL_PASSES = ("lint", "trace", "budget")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Trace-safety & kernel-budget static analysis suite")
+    ap.add_argument("--root", type=Path, default=None,
+                    help="repo root (default: auto from this file)")
+    ap.add_argument("--baseline", type=Path, default=None,
+                    help="baseline JSON (default: <root>/"
+                         "analysis_baseline.json)")
+    ap.add_argument("--passes", default=",".join(ALL_PASSES),
+                    help=f"comma list of {ALL_PASSES}")
+    ap.add_argument("--report", type=Path, default=None,
+                    help="write the machine-readable report here")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline from the current tree "
+                         "(keeps existing reasons) and exit 0")
+    ap.add_argument("-q", "--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    root = args.root or Path(__file__).resolve().parents[3]
+    baseline_path = args.baseline or root / "analysis_baseline.json"
+    passes = [p.strip() for p in args.passes.split(",") if p.strip()]
+    unknown = set(passes) - set(ALL_PASSES)
+    if unknown:
+        ap.error(f"unknown passes: {sorted(unknown)}")
+
+    findings = []
+    audited, checked = [], []
+    if "lint" in passes:
+        from repro.analysis.lint import run_lint
+        findings.extend(run_lint(root))
+    if "trace" in passes:
+        from repro.analysis.trace_audit import run_trace_audit
+        fs, audited = run_trace_audit()
+        findings.extend(fs)
+    if "budget" in passes:
+        from repro.analysis.kernel_budget import probe_repo_kernels
+        fs, checked = probe_repo_kernels()
+        findings.extend(fs)
+
+    if args.update_baseline:
+        old = {}
+        try:
+            old = load_baseline(baseline_path)
+        except ValueError:
+            pass
+        reasons = {k: v.get("reason") for k, v in old.items()
+                   if v.get("reason")}
+        entries = write_baseline(baseline_path, findings, reasons)
+        print(f"baseline rewritten: {len(entries)} keys -> "
+              f"{baseline_path}")
+        return 0
+
+    baseline = load_baseline(baseline_path)
+    baselined, new, stale = apply_baseline(findings, baseline)
+
+    if not args.quiet:
+        suppressed = [f for f in findings if f.suppressed]
+        for f in sort_findings(suppressed):
+            print(f"  ok  {f.render()}")
+        for f in sort_findings(baselined):
+            print(f"BASE  {f.render()}")
+        for f in sort_findings(new):
+            print(f" NEW  {f.render()}")
+        for k in sorted(stale):
+            print(f"STALE baseline entry no longer matched: {k}")
+        print(f"\n{len(suppressed)} suppressed (trace-ok), "
+              f"{len(baselined)} baselined, {len(new)} new, "
+              f"{len(stale)} stale baseline key(s); "
+              f"passes={','.join(passes)}"
+              + (f"; audited={len(audited)} entry points" if audited
+                 else "")
+              + (f"; kernels={len(set(checked))}" if checked else ""))
+
+    if args.report:
+        write_report(args.report,
+                     build_report(findings, baselined, new, stale,
+                                  audited, checked))
+        if not args.quiet:
+            print(f"report -> {args.report}")
+
+    if new:
+        print(f"FAIL: {len(new)} new finding(s) not covered by "
+              f"{baseline_path.name}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,85 @@
+"""Baseline ratchet for the analysis suite.
+
+The baseline file (``analysis_baseline.json``) catalogs known findings by
+count under the line-independent key ``RULE|path|symbol`` so routine edits
+don't churn it.  The gate:
+
+* an unsuppressed finding whose key has remaining baseline budget is
+  *baselined* (reported, not fatal);
+* anything beyond the budget is *new* and fails the run;
+* baseline entries no longer matched are *stale* — reported so the file
+  can be ratcheted DOWN (``--update-baseline`` rewrites it from the
+  current tree; the report counts make a growing suppression set visible
+  in review).
+
+Format::
+
+    {
+      "version": 1,
+      "entries": {
+        "HOST-ESCAPE|src/repro/core/sharded.py|split_shard": {
+          "count": 2,
+          "reason": "eager-only host pass (dispatcher keeps it off-trace)"
+        },
+        ...
+      }
+    }
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+from repro.analysis.findings import Finding
+
+VERSION = 1
+
+
+def load_baseline(path: Path) -> Dict[str, dict]:
+    if not path.exists():
+        return {}
+    data = json.loads(path.read_text())
+    if data.get("version") != VERSION:
+        raise ValueError(
+            f"baseline {path} has version {data.get('version')!r}; "
+            f"this tool writes version {VERSION}")
+    return dict(data.get("entries", {}))
+
+
+def write_baseline(path: Path, findings: List[Finding],
+                   reasons: Dict[str, str] = None) -> Dict[str, dict]:
+    """Rewrite the baseline from the current unsuppressed findings."""
+    entries: Dict[str, dict] = {}
+    for f in findings:
+        if f.suppressed:
+            continue
+        e = entries.setdefault(f.key, {"count": 0})
+        e["count"] += 1
+    for key, entry in entries.items():
+        reason = (reasons or {}).get(key)
+        if reason:
+            entry["reason"] = reason
+    path.write_text(json.dumps(
+        {"version": VERSION,
+         "entries": dict(sorted(entries.items()))}, indent=2) + "\n")
+    return entries
+
+
+def apply_baseline(findings: List[Finding], baseline: Dict[str, dict]
+                   ) -> Tuple[List[Finding], List[Finding], List[str]]:
+    """Split unsuppressed findings into (baselined, new); also return
+    stale baseline keys whose budget was not fully consumed."""
+    budget = {k: int(v.get("count", 0)) for k, v in baseline.items()}
+    baselined: List[Finding] = []
+    new: List[Finding] = []
+    for f in findings:
+        if f.suppressed:
+            continue
+        if budget.get(f.key, 0) > 0:
+            budget[f.key] -= 1
+            baselined.append(f)
+        else:
+            new.append(f)
+    stale = [k for k, left in budget.items() if left > 0]
+    return baselined, new, stale

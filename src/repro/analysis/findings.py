@@ -1,0 +1,82 @@
+"""Finding model + rule registry for the static-analysis suite.
+
+Every pass (``lint``, ``trace_audit``, ``kernel_budget``) reports the same
+``Finding`` record so the CLI, the baseline file and the machine-readable
+report speak one vocabulary.  A finding is *suppressed* when the flagged
+line (or its enclosing ``def``) carries a ``# trace-ok: <reason>``
+annotation — suppressed findings are cataloged in the report, never
+failures.  Unsuppressed findings are matched against the checked-in
+baseline (``analysis_baseline.json``); anything beyond the baselined count
+for its key is NEW and fails the CI gate.
+
+Rule IDs (documented in ANALYSIS.md):
+
+trace audit (jaxpr-level, ``trace_audit``)
+  TRACE-CALLBACK   host-callback primitive inside a traced entry point
+  TRACE-DYNSHAPE   non-static output shape on a traced entry point
+  TRACE-RETRACE    a jitted path retraced more than once per shape bucket
+
+AST lint (source-level, ``lint``)
+  HOST-ESCAPE      int()/float()/bool()/.item()/np.asarray in a function
+                   reachable from a traced context
+  SILENT-DEGRADE   an except block around device code that neither raises
+                   nor warns — the silent-eager-fallback bug class
+  INTERPRET-PLUMB  a pallas_call site that does not thread a caller-
+                   controlled ``interpret=`` flag
+
+kernel budget (BlockSpec-level, ``kernel_budget``)
+  VMEM-BUDGET      modeled per-grid-step VMEM footprint (tile bytes x live
+                   buffers x double-buffering) over budget
+  GRID-RANK        grid/index_map/block-shape rank inconsistency
+  ALIAS-HAZARD     write-after-read hazard through input_output_aliases
+  DMA-SKIP         clustered padding slot fails to coalesce onto the
+                   already-resident tile (the PR 2 DMA-skip invariant)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+RULES = {
+    "TRACE-CALLBACK": "host-callback primitive inside a traced entry point",
+    "TRACE-DYNSHAPE": "non-static output shape on a traced entry point",
+    "TRACE-RETRACE": "jitted path retraced more than once per shape bucket",
+    "HOST-ESCAPE": "host round-trip call reachable from a traced context",
+    "SILENT-DEGRADE": "except block around device code neither raises nor "
+                      "warns",
+    "INTERPRET-PLUMB": "pallas_call without caller-controlled interpret=",
+    "VMEM-BUDGET": "per-grid-step VMEM footprint over budget",
+    "GRID-RANK": "grid/index_map/block-shape rank inconsistency",
+    "ALIAS-HAZARD": "write-after-read hazard through input_output_aliases",
+    "DMA-SKIP": "clustered padding slot DMAs a non-resident tile",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str              # one of RULES
+    path: str              # repo-relative file (or pseudo-path for probes)
+    line: int              # 1-based; 0 when not line-addressable
+    symbol: str            # enclosing function qualname / kernel name
+    message: str
+    suppressed: bool = False
+    reason: Optional[str] = None   # the trace-ok reason when suppressed
+
+    @property
+    def key(self) -> str:
+        """Line-independent identity used by the baseline file.
+
+        Keyed on (rule, path, symbol) so routine edits that move lines
+        do not churn the baseline; multiple findings sharing a key are
+        baselined by *count* (see ``baseline``).
+        """
+        return f"{self.rule}|{self.path}|{self.symbol}"
+
+    def render(self) -> str:
+        sup = f"  [trace-ok: {self.reason}]" if self.suppressed else ""
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        return f"{self.rule:15s} {loc} ({self.symbol}): {self.message}{sup}"
+
+
+def sort_findings(findings):
+    return sorted(findings, key=lambda f: (f.rule, f.path, f.symbol, f.line))

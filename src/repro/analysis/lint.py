@@ -1,0 +1,461 @@
+"""AST lint pass: host escapes, silent degradation, interpret plumbing.
+
+Pure-source analysis over ``src/repro`` (no jax import, no execution).
+The pass builds a per-module AST index (imports, function qualnames, call
+graph), seeds a *traced-reachable* set from every way this repo enters a
+traced context, propagates reachability through the intra-repo call graph,
+then applies three rules:
+
+``HOST-ESCAPE``
+    ``int()/float()/bool()`` on a non-literal, ``.item()``, and
+    ``np.asarray/np.array`` inside a traced-reachable function force a
+    device->host transfer + sync under trace (or a
+    ``ConcretizationTypeError``) — the exact bug class PRs 4-5 fixed by
+    hand.  Flagged only in traced-reachable functions; eager-only helpers
+    are free to touch host values.
+
+``SILENT-DEGRADE``
+    an ``except`` handler that neither re-raises nor ``warnings.warn``-s,
+    wrapped around device-ish code (names ``jnp``/``jax``/``lax``/``pl``/
+    ``pltpu`` in the try body or the handler).  PR 5's silent eager
+    fallback hid a 40x regression this way.  Applies everywhere, not just
+    traced code — degradation is silent wherever it happens.
+
+``INTERPRET-PLUMB``
+    a ``pallas_call`` invocation whose ``interpret=`` argument is not a
+    caller-controlled variable (missing entirely, or hard-coded
+    ``True``/``False``).  Kernels that don't thread the flag can't run
+    under the CPU-only CI lanes.
+
+Suppression: a ``# trace-ok: <reason>`` comment on the flagged line, on
+the enclosing ``def`` line, or on the line directly above the ``def``
+marks the finding suppressed (cataloged in the report, not a failure).
+A def-level annotation covers every finding inside that function —
+the idiom for intentionally-eager host passes like the split/merge
+machinery in ``core/sharded.py``.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.findings import Finding
+
+TRACE_OK_RE = re.compile(r"#\s*trace-ok:\s*(.+?)\s*$")
+
+#: call names that force a host round-trip under trace
+_HOST_CASTS = {"int", "float", "bool"}
+#: attribute tails that force one
+_HOST_ATTRS = {"item", "tolist"}
+#: numpy-conversion attribute calls (module alias resolved per-file)
+_NP_CONVERTERS = {"asarray", "array"}
+#: names whose presence marks a block as "device code"
+_DEVICE_NAMES = {"jnp", "jax", "lax", "pl", "pltpu"}
+
+#: decorators that make a function a traced seed
+_JIT_DECOS = {("jax", "jit"), ("jit",)}
+
+
+# ---------------------------------------------------------------------------
+# Per-module scan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FunctionInfo:
+    qualname: str            # "module.sub:Outer.fn"
+    module: str              # dotted module ("repro.kernels.ops")
+    name: str                # bare name
+    node: ast.AST            # FunctionDef / AsyncFunctionDef
+    path: str                # repo-relative file path
+    calls: Set[str] = dataclasses.field(default_factory=set)  # resolved
+    is_seed: bool = False
+    seed_why: str = ""
+
+
+def _dotted(node: ast.AST) -> Optional[Tuple[str, ...]]:
+    """("jax","jit") for jax.jit / Name chains; None for anything else."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return None
+
+
+class ModuleScan:
+    """AST index of one source file."""
+
+    def __init__(self, path: Path, root: Path):
+        self.path = path
+        self.rel = str(path.relative_to(root))
+        self.source = path.read_text()
+        self.lines = self.source.splitlines()
+        self.tree = ast.parse(self.source, filename=str(path))
+        self.module = self._module_name(root)
+        # import alias -> dotted target ("np" -> "numpy",
+        # "shd" -> "repro.core.sharded", "partial" -> "functools.partial")
+        self.aliases: Dict[str, str] = {}
+        self.functions: Dict[str, FunctionInfo] = {}   # qualname -> info
+        self._collect_imports()
+        self._collect_functions()
+
+    def _module_name(self, root: Path) -> str:
+        rel = self.path.relative_to(root)
+        parts = list(rel.with_suffix("").parts)
+        if parts and parts[0] == "src":
+            parts = parts[1:]
+        if parts and parts[-1] == "__init__":
+            parts = parts[:-1]
+        return ".".join(parts)
+
+    def _collect_imports(self) -> None:
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    self.aliases[a.asname or a.name.split(".")[0]] = a.name
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    self.aliases[a.asname or a.name] = \
+                        f"{node.module}.{a.name}"
+
+    def _collect_functions(self) -> None:
+        mod = self
+
+        class V(ast.NodeVisitor):
+            def __init__(self):
+                self.stack: List[str] = []
+
+            def _add(self, node):
+                qual = ".".join(self.stack + [node.name])
+                info = FunctionInfo(
+                    qualname=f"{mod.module}:{qual}", module=mod.module,
+                    name=node.name, node=node, path=mod.rel)
+                mod.functions[info.qualname] = info
+                self.stack.append(node.name)
+                self.generic_visit(node)
+                self.stack.pop()
+
+            visit_FunctionDef = _add
+            visit_AsyncFunctionDef = _add
+
+            def visit_ClassDef(self, node):
+                self.stack.append(node.name)
+                self.generic_visit(node)
+                self.stack.pop()
+
+        V().visit(self.tree)
+
+    # -- annotation lookup --------------------------------------------------
+    def trace_ok_reason(self, lineno: int) -> Optional[str]:
+        if 1 <= lineno <= len(self.lines):
+            m = TRACE_OK_RE.search(self.lines[lineno - 1])
+            if m:
+                return m.group(1)
+        return None
+
+    def def_trace_ok(self, fn: FunctionInfo) -> Optional[str]:
+        node = fn.node
+        for ln in (node.lineno, node.lineno - 1):
+            r = self.trace_ok_reason(ln)
+            if r:
+                return r
+        for deco in getattr(node, "decorator_list", ()):
+            r = self.trace_ok_reason(deco.lineno) or \
+                self.trace_ok_reason(deco.lineno - 1)
+            if r:
+                return r
+        return None
+
+    def resolve_call(self, node: ast.AST) -> Optional[str]:
+        """Dotted source name of a call target, aliases expanded."""
+        parts = _dotted(node)
+        if parts is None:
+            return None
+        head = self.aliases.get(parts[0], parts[0])
+        return ".".join((head,) + parts[1:])
+
+
+# ---------------------------------------------------------------------------
+# Repo-wide index + traced-reachability propagation
+# ---------------------------------------------------------------------------
+
+#: entry points that are traced by construction even though the jit wrap
+#: happens at a call site the AST pass can't see locally
+EXTRA_SEEDS = (
+    "repro.core.sharded:apply_ops_sharded",        # kvcache _jit_apply
+    "repro.core.versioned:VersionedIndex.search",  # jitted per read_view
+    "repro.core.versioned:VersionedIndex.update",
+)
+
+
+class RepoLint:
+    def __init__(self, root: Path, src_dirs: Tuple[str, ...] = ("src/repro",),
+                 extra_seeds: Tuple[str, ...] = EXTRA_SEEDS):
+        self.root = root
+        self.scans: List[ModuleScan] = []
+        for d in src_dirs:
+            base = root / d
+            for p in sorted(base.rglob("*.py")):
+                self.scans.append(ModuleScan(p, root))
+        # name indices for call resolution
+        self.by_qual: Dict[str, FunctionInfo] = {}
+        self.by_name: Dict[str, List[FunctionInfo]] = {}
+        for scan in self.scans:
+            for info in scan.functions.values():
+                self.by_qual[info.qualname] = info
+                self.by_name.setdefault(info.name, []).append(info)
+        self._scan_of: Dict[str, ModuleScan] = {
+            info.qualname: scan
+            for scan in self.scans for info in scan.functions.values()}
+        self._build_call_graph()
+        self._seed(extra_seeds)
+        self._propagate()
+
+    # -- call graph ---------------------------------------------------------
+    def _resolve_target(self, scan: ModuleScan, dotted: str
+                        ) -> Optional[str]:
+        """Map a resolved dotted call name onto a known FunctionInfo."""
+        if ":" in dotted:
+            return dotted if dotted in self.by_qual else None
+        # module-qualified: repro.core.sharded.route -> qualname form
+        head, _, tail = dotted.rpartition(".")
+        if head:
+            cand = f"{head}:{tail}"
+            if cand in self.by_qual:
+                return cand
+            # method via module alias chain is out of scope; fall through
+        # bare name inside the same module
+        for info in self.by_name.get(dotted.split(".")[-1], ()):
+            if info.module == scan.module:
+                return info.qualname
+        # unique bare name anywhere in the repo
+        hits = self.by_name.get(dotted, ())
+        if len(hits) == 1:
+            return hits[0].qualname
+        return None
+
+    def _build_call_graph(self) -> None:
+        for scan in self.scans:
+            for info in scan.functions.values():
+                for node in ast.walk(info.node):
+                    if not isinstance(node, ast.Call):
+                        continue
+                    dotted = scan.resolve_call(node.func)
+                    if dotted is None:
+                        continue
+                    target = self._resolve_target(scan, dotted)
+                    if target:
+                        info.calls.add(target)
+                    # references passed INTO jit/partial also seed below
+
+    # -- seeds --------------------------------------------------------------
+    def _mark_seed(self, qual: str, why: str) -> None:
+        info = self.by_qual.get(qual)
+        if info and not info.is_seed:
+            info.is_seed = True
+            info.seed_why = why
+
+    def _seed(self, extra: Tuple[str, ...]) -> None:
+        for qual in extra:
+            self._mark_seed(qual, "listed traced entry point")
+        for scan in self.scans:
+            for info in scan.functions.values():
+                for deco in getattr(info.node, "decorator_list", ()):
+                    target = deco.func if isinstance(deco, ast.Call) \
+                        else deco
+                    dotted = scan.resolve_call(target) or ""
+                    if dotted in ("jax.jit", "functools.partial"):
+                        if dotted == "functools.partial":
+                            args = deco.args if isinstance(deco, ast.Call) \
+                                else []
+                            if not args or \
+                                    (scan.resolve_call(args[0]) or "") \
+                                    != "jax.jit":
+                                continue
+                        self._mark_seed(info.qualname, "@jit decorator")
+            # jax.jit(f) / jax.jit(functools.partial(f, ...)) references
+            for node in ast.walk(scan.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                dotted = scan.resolve_call(node.func) or ""
+                if dotted == "jax.jit":
+                    for ref in self._fn_refs(scan, node.args[:1]):
+                        self._mark_seed(ref, "jax.jit(...) reference")
+                elif dotted.endswith("pallas_call") or \
+                        dotted == "jax.experimental.pallas.pallas_call":
+                    for ref in self._fn_refs(scan, node.args[:1]):
+                        self._mark_seed(ref, "pallas kernel body")
+
+    def _fn_refs(self, scan: ModuleScan, nodes) -> List[str]:
+        """Function qualnames referenced by expressions (through partial)."""
+        out: List[str] = []
+        for node in nodes:
+            if isinstance(node, ast.Call):
+                dotted = scan.resolve_call(node.func) or ""
+                if dotted == "functools.partial":
+                    out.extend(self._fn_refs(scan, node.args[:1]))
+                continue
+            dotted = scan.resolve_call(node)
+            if dotted is None:
+                continue
+            target = self._resolve_target(scan, dotted)
+            if target:
+                out.append(target)
+        return out
+
+    def _propagate(self) -> None:
+        frontier = [i for i in self.by_qual.values() if i.is_seed]
+        while frontier:
+            info = frontier.pop()
+            for callee_qual in info.calls:
+                callee = self.by_qual.get(callee_qual)
+                if callee and not callee.is_seed:
+                    callee.is_seed = True
+                    callee.seed_why = f"called from {info.qualname}"
+                    frontier.append(callee)
+
+    # -- rules --------------------------------------------------------------
+    def run(self) -> List[Finding]:
+        findings: List[Finding] = []
+        for scan in self.scans:
+            findings.extend(self._rule_silent_degrade(scan))
+            findings.extend(self._rule_interpret_plumb(scan))
+            for info in scan.functions.values():
+                if info.is_seed:
+                    findings.extend(self._rule_host_escape(scan, info))
+        return findings
+
+    def _mk(self, scan: ModuleScan, info: Optional[FunctionInfo],
+            node: ast.AST, rule: str, msg: str) -> Finding:
+        reason = scan.trace_ok_reason(node.lineno)
+        if reason is None and info is not None:
+            reason = scan.def_trace_ok(info)
+        symbol = info.qualname.split(":", 1)[1] if info else "<module>"
+        return Finding(rule=rule, path=scan.rel, line=node.lineno,
+                       symbol=symbol, message=msg,
+                       suppressed=reason is not None, reason=reason)
+
+    def _enclosing(self, scan: ModuleScan, node: ast.AST
+                   ) -> Optional[FunctionInfo]:
+        best = None
+        for info in scan.functions.values():
+            f = info.node
+            if f.lineno <= node.lineno <= \
+                    (getattr(f, "end_lineno", f.lineno) or f.lineno):
+                if best is None or f.lineno > best.node.lineno:
+                    best = info
+        return best
+
+    # HOST-ESCAPE ----------------------------------------------------------
+    def _rule_host_escape(self, scan: ModuleScan, info: FunctionInfo
+                          ) -> List[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(info.node):
+            if not isinstance(node, ast.Call):
+                continue
+            # skip calls that belong to a nested function (it gets its own
+            # FunctionInfo and is only checked if itself traced-reachable)
+            if self._enclosing(scan, node) is not info:
+                continue
+            msg = None
+            if isinstance(node.func, ast.Name) and \
+                    node.func.id in _HOST_CASTS and node.args and \
+                    not isinstance(node.args[0], ast.Constant):
+                msg = (f"{node.func.id}() on a traced value forces a "
+                       "device sync (or ConcretizationTypeError)")
+            elif isinstance(node.func, ast.Attribute) and \
+                    node.func.attr in _HOST_ATTRS:
+                msg = f".{node.func.attr}() forces a device->host transfer"
+            elif isinstance(node.func, ast.Attribute) and \
+                    node.func.attr in _NP_CONVERTERS:
+                base = _dotted(node.func.value)
+                resolved = scan.aliases.get(base[0], base[0]) if base \
+                    else None
+                if resolved == "numpy":
+                    msg = (f"np.{node.func.attr}() materializes a device "
+                           "array on host (per-call sync)")
+            if msg:
+                out.append(self._mk(
+                    scan, info, node, "HOST-ESCAPE",
+                    f"{msg}; function is traced-reachable "
+                    f"({info.seed_why})"))
+        return out
+
+    # SILENT-DEGRADE -------------------------------------------------------
+    def _names_in(self, node: ast.AST) -> Set[str]:
+        return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+    def _rule_silent_degrade(self, scan: ModuleScan) -> List[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(scan.tree):
+            if not isinstance(node, ast.Try):
+                continue
+            try_names = set()
+            for stmt in node.body:
+                try_names |= self._names_in(stmt)
+            device_try = bool(try_names & _DEVICE_NAMES)
+            for handler in node.handlers:
+                # catching a jax error class (ConcretizationTypeError &c.)
+                # is device context even when the try body's names aren't
+                handler_type_names = self._names_in(handler.type) \
+                    if handler.type is not None else set()
+                if not device_try and \
+                        not handler_type_names & _DEVICE_NAMES:
+                    continue
+                loud = False
+                for stmt in ast.walk(ast.Module(body=handler.body,
+                                                type_ignores=[])):
+                    if isinstance(stmt, ast.Raise):
+                        loud = True
+                    if isinstance(stmt, ast.Call):
+                        dotted = scan.resolve_call(stmt.func) or ""
+                        if dotted in ("warnings.warn",) or \
+                                dotted.endswith(".warn") or \
+                                dotted.endswith(".error") or \
+                                dotted.endswith(".exception"):
+                            loud = True
+                if loud:
+                    continue
+                info = self._enclosing(scan, handler)
+                out.append(self._mk(
+                    scan, info, handler, "SILENT-DEGRADE",
+                    "except block around device code neither raises nor "
+                    "warns — failures degrade silently (the PR 5 eager-"
+                    "fallback bug class)"))
+        return out
+
+    # INTERPRET-PLUMB ------------------------------------------------------
+    def _rule_interpret_plumb(self, scan: ModuleScan) -> List[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(scan.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            dotted = scan.resolve_call(node.func) or ""
+            if not (dotted.endswith("pallas_call")):
+                continue
+            kw = {k.arg: k.value for k in node.keywords if k.arg}
+            info = self._enclosing(scan, node)
+            val = kw.get("interpret")
+            ok = False
+            if val is not None and not isinstance(val, ast.Constant):
+                # caller-controlled if it reads a variable (typically the
+                # enclosing wrapper's `interpret` parameter)
+                ok = True
+            if not ok:
+                what = "missing" if val is None else \
+                    f"hard-coded {ast.literal_eval(val)!r}"
+                out.append(self._mk(
+                    scan, info, node, "INTERPRET-PLUMB",
+                    f"pallas_call interpret= is {what}; thread a caller-"
+                    "controlled flag so CPU-only lanes can run the kernel"))
+        return out
+
+
+def run_lint(root: Path, src_dirs: Tuple[str, ...] = ("src/repro",),
+             extra_seeds: Tuple[str, ...] = EXTRA_SEEDS) -> List[Finding]:
+    return RepoLint(root, src_dirs, extra_seeds).run()

@@ -1,0 +1,206 @@
+"""Shared call-graph / jaxpr walkers for the analysis passes.
+
+Two cooperating abstractions live here:
+
+* ``CostGraph`` — the IR-agnostic, memoized bottom-up accumulator that used
+  to be hand-rolled inside ``benchmarks/hlo_analysis.py``.  A concrete IR
+  (HLO computations, jaxpr call trees) subclasses it with ``node_edges``
+  (children with trip-count multipliers, field filters and max-over-
+  branches groups) and ``local_cost`` (per-node contribution); roots are
+  the nodes nothing references.  ``benchmarks/hlo_analysis.Analyzer`` is
+  now an instantiation of this walker over parsed HLO text, and the jaxpr
+  auditor reuses the same machinery for its per-entry-point op metrics —
+  one traversal engine instead of two string-matching ones.
+
+* ``iter_eqns`` — a recursive jaxpr iterator yielding every equation in
+  every sub-jaxpr (while/scan/cond bodies, pjit calls, custom_* wrappers)
+  together with the static trip multiplier accumulated on the way down
+  (``lax.scan`` carries its ``length``; ``lax.while_loop`` trip counts are
+  data-dependent and reported as multiplier 1 with ``bounded=False``).
+  ``trace_audit`` walks this to flag host-callback primitives anywhere in
+  a traced entry point, however deeply nested.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, Iterator, List, Optional, Tuple
+
+FIELD_FLOPS = "flops"
+FIELD_BYTES = "bytes"
+FIELD_COLL = "coll"
+ALL_FIELDS = frozenset((FIELD_FLOPS, FIELD_BYTES, FIELD_COLL))
+
+
+@dataclasses.dataclass
+class Cost:
+    """Additive cost triple + per-kind collective byte breakdown."""
+
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0,
+            fields: frozenset = ALL_FIELDS) -> None:
+        if FIELD_FLOPS in fields:
+            self.flops += mult * other.flops
+        if FIELD_BYTES in fields:
+            self.bytes += mult * other.bytes
+        if FIELD_COLL in fields:
+            self.coll_bytes += mult * other.coll_bytes
+            for k, v in other.coll_by_kind.items():
+                self.coll_by_kind[k] = self.coll_by_kind.get(k, 0) + mult * v
+
+    def magnitude(self) -> float:
+        """Ordering key for max-over-branches edge groups."""
+        return self.flops + self.bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class Edge:
+    """One child reference of a node.
+
+    ``targets`` usually names a single child; several names make the edge a
+    *branch group* — the max-``magnitude`` alternative is charged (the
+    worst-case-branch rule for HLO conditionals).  ``mult`` scales the
+    child's contribution (loop trip counts); ``fields`` restricts which
+    cost components propagate (an HLO fusion body contributes flops and
+    collectives but not bytes — its interior traffic is on-chip).
+    """
+
+    targets: Tuple[str, ...]
+    mult: float = 1.0
+    fields: frozenset = ALL_FIELDS
+
+
+class CostGraph:
+    """Memoized bottom-up cost accumulation over a named-node call DAG."""
+
+    #: distinct memo spaces per node (HLO computations are charged
+    #: differently when entered as a fusion body); subclasses pass the
+    #: context tag through ``node_edges``/``local_cost``.
+    def __init__(self) -> None:
+        self._memo: Dict[Tuple[str, str], Cost] = {}
+
+    # -- subclass surface ---------------------------------------------------
+    def node_names(self) -> Iterable[str]:
+        raise NotImplementedError
+
+    def node_edges(self, name: str, ctx: str = "") -> List[Edge]:
+        raise NotImplementedError
+
+    def local_cost(self, name: str, ctx: str = "") -> Cost:
+        raise NotImplementedError
+
+    # -- engine -------------------------------------------------------------
+    def cost(self, name: str, ctx: str = "") -> Cost:
+        key = (name, ctx)
+        if key in self._memo:
+            return self._memo[key]
+        # cycle guard: a self-referential IR contributes its local cost once
+        self._memo[key] = Cost()
+        total = self.local_cost(name, ctx)
+        for edge in self.node_edges(name, ctx):
+            kids = [self.cost(t, self.child_ctx(name, t, ctx, edge))
+                    for t in edge.targets if t is not None]
+            kids = [k for k in kids if k is not None]
+            if not kids:
+                continue
+            child = max(kids, key=Cost.magnitude) if len(kids) > 1 else kids[0]
+            total.add(child, mult=edge.mult, fields=edge.fields)
+        self._memo[key] = total
+        return total
+
+    def child_ctx(self, parent: str, child: str, ctx: str,
+                  edge: Edge) -> str:
+        """Context tag handed to a child; default: inherit nothing."""
+        return ""
+
+    def roots(self) -> List[str]:
+        referenced = set()
+        for name in self.node_names():
+            for edge in self.node_edges(name, ""):
+                referenced.update(t for t in edge.targets if t is not None)
+        return [n for n in self.node_names() if n not in referenced]
+
+    def total_cost(self) -> Cost:
+        total = Cost()
+        for r in self.roots():
+            total.add(self.cost(r))
+        return total
+
+
+# ---------------------------------------------------------------------------
+# jaxpr iteration (used by trace_audit; imports jax lazily so the pure-AST
+# passes never pay for it)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EqnVisit:
+    eqn: object            # jax.core.JaxprEqn
+    prim_name: str
+    mult: float            # accumulated static trip multiplier
+    bounded: bool          # False once inside a data-dependent while_loop
+    path: Tuple[str, ...]  # primitive names on the way down
+
+
+_CALL_PARAMS = ("jaxpr", "call_jaxpr", "cond_jaxpr", "body_jaxpr",
+                "branches", "fun_jaxpr", "jvp_jaxpr_fun")
+
+
+def _sub_jaxprs(eqn) -> Iterator[Tuple[object, float, bool]]:
+    """(sub_jaxpr, extra_mult, still_bounded) children of one equation."""
+    params = eqn.params
+    name = eqn.primitive.name
+    if name == "scan":
+        length = float(params.get("length", 1) or 1)
+        yield params["jaxpr"], length, True
+        return
+    if name == "while":
+        yield params["cond_jaxpr"], 1.0, False
+        yield params["body_jaxpr"], 1.0, False
+        return
+    if name == "cond":
+        for br in params.get("branches", ()):
+            yield br, 1.0, True
+        return
+    for key in _CALL_PARAMS:
+        sub = params.get(key)
+        if sub is None:
+            continue
+        if isinstance(sub, (tuple, list)):
+            for s in sub:
+                yield s, 1.0, True
+        else:
+            yield sub, 1.0, True
+
+
+def _as_jaxpr(obj):
+    """Unwrap ClosedJaxpr-likes to the underlying Jaxpr."""
+    return getattr(obj, "jaxpr", obj)
+
+
+def iter_eqns(jaxpr, mult: float = 1.0, bounded: bool = True,
+              path: Tuple[str, ...] = ()) -> Iterator[EqnVisit]:
+    """Yield every equation of ``jaxpr`` and all nested sub-jaxprs."""
+    jaxpr = _as_jaxpr(jaxpr)
+    eqns = getattr(jaxpr, "eqns", None)
+    if eqns is None:
+        return
+    for eqn in eqns:
+        name = eqn.primitive.name
+        yield EqnVisit(eqn, name, mult, bounded, path)
+        for sub, extra, still in _sub_jaxprs(eqn):
+            sub = _as_jaxpr(sub)
+            if sub is jaxpr:        # defensive: no self-recursion
+                continue
+            yield from iter_eqns(sub, mult * extra, bounded and still,
+                                 path + (name,))
+
+
+def primitive_counts(jaxpr) -> Dict[str, int]:
+    """Flat primitive histogram over the whole (nested) jaxpr."""
+    counts: Dict[str, int] = {}
+    for visit in iter_eqns(jaxpr):
+        counts[visit.prim_name] = counts.get(visit.prim_name, 0) + 1
+    return counts

@@ -187,7 +187,7 @@ def _ceiling(shl: ShardedSkipList, max_shards: int) -> int:
     """Effective live-shard ceiling: the static axis, tightened by the
     caller's ``max_shards`` knob when that is smaller."""
     S = shl.n_shards
-    return min(int(max_shards), S) if max_shards else S
+    return min(int(max_shards), S) if max_shards else S  # trace-ok: max_shards is a static python knob, never traced
 
 
 def watermark_rebalance_traced(shl: ShardedSkipList, *,

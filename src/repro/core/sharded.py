@@ -356,6 +356,7 @@ def _set_shard_slice(shl: ShardedSkipList, s: int, width: int,
     return ShardedSkipList(shards=new_shards, boundaries=boundaries)
 
 
+# trace-ok: eager-only host pass (apply_ops_sharded dispatches to rebalance_traced under trace)
 def split_shard(shl: ShardedSkipList, s: int,
                 at_key: Optional[int] = None, *, seed: int = 0
                 ) -> ShardedSkipList:
@@ -402,6 +403,7 @@ def split_shard(shl: ShardedSkipList, s: int,
     return _set_shard_slice(shl, s, 1, pair, boundaries)
 
 
+# trace-ok: eager-only host pass (apply_ops_sharded dispatches to rebalance_traced under trace)
 def merge_shards(shl: ShardedSkipList, s: int, *, seed: int = 0
                  ) -> ShardedSkipList:
     """Merge adjacent shards ``s`` and ``s + 1`` into one.
@@ -475,6 +477,7 @@ def validate_watermarks(high_water: float, low_water: float) -> None:
                          f"(0, high_water={high_water})")
 
 
+# trace-ok: eager-only dispatch predicate (guarded by _is_tracing at the call site)
 def _has_static_ceiling(shl: ShardedSkipList) -> bool:
     """Concrete check: does this (eager) state carry dead ceiling slots?
 
@@ -489,6 +492,7 @@ def _has_static_ceiling(shl: ShardedSkipList) -> bool:
     return shl.n_shards > 1 and int(shl.boundaries[-1]) == int(KEY_MAX)
 
 
+# trace-ok: eager-only host pass (apply_ops_sharded dispatches to rebalance_traced under trace)
 def _watermark_rebalance(shl: ShardedSkipList, *, high_water: float,
                          low_water: float, max_shards: int, seed: int = 0
                          ) -> Tuple[ShardedSkipList, RebalanceStats]:
@@ -553,6 +557,7 @@ def rebalance(shl: ShardedSkipList, *, high_water: float = HIGH_WATER,
                                 seed=seed)
 
 
+# trace-ok: eager-only host pass (apply_ops_sharded dispatches to rebalance_traced under trace)
 def _exhaustion_guard(shl: ShardedSkipList, op_types: jax.Array,
                       keys: jax.Array, *, max_shards: int, seed: int = 0
                       ) -> Tuple[ShardedSkipList, int]:
@@ -740,7 +745,7 @@ def apply_ops_sharded(shl: ShardedSkipList, op_types: jax.Array,
     if not traced and not max_segment:
         # eager default: concretize the widest segment so the pass loop
         # dispatches in ONE window (>= 1: segment lengths sum to B > 0)
-        max_segment = int(jnp.max(lens))
+        max_segment = int(jnp.max(lens))  # trace-ok: eager branch only (traced callers hit the static-window path)
     out, results = _apply_segment_passes(shl, op_types, keys, vals,
                                          perm, starts, lens,
                                          max_segment=max_segment)
@@ -783,7 +788,7 @@ def _apply_segment_passes(shl: ShardedSkipList, op_types: jax.Array,
     """
     S = shl.n_shards
     B = keys.shape[0]
-    W = int(max_segment) or default_segment_window(B, S)
+    W = int(max_segment) or default_segment_window(B, S)  # trace-ok: max_segment is a static python knob, never traced
     W = min(B, _segment_window(W))
     maxlen = jnp.max(lens)
     # pad the sorted batch by W no-op reads; windows with any live lane

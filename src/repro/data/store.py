@@ -88,10 +88,11 @@ class IndexedSampleStore:
             # The VMEM budget only binds the kernel path; the pure-JAX path
             # has no tile constraint, so auto keeps it monolithic (sharding
             # there would just cost S-times apply_ops work for nothing).
-            mono_tile = kops.shard_vmem_footprint(cfg.index_levels, cap,
-                                                  cfg.foresight)
+            from repro.analysis.kernel_budget import (VMEM_BUDGET_BYTES,
+                                                      tile_bytes)
+            mono_tile = tile_bytes(cfg.index_levels, cap, cfg.foresight)
             needs_shards = cfg.use_kernel and \
-                mono_tile > kops.VMEM_BUDGET_BYTES
+                mono_tile > VMEM_BUDGET_BYTES
             self.n_shards = kops.auto_shards(
                 cfg.n_samples, cfg.index_levels,
                 cfg.foresight) if needs_shards else 1

@@ -69,7 +69,10 @@ from repro.kernels.foresight_traverse import (QBLK, base_traverse,
                                               foresight_traverse_sharded)
 from repro.kernels.ref import encode_float_keys
 
-VMEM_BUDGET_BYTES = 12 * 1024 * 1024   # leave headroom of the 16 MiB/core
+# the budget constant and tile-footprint formula live in ONE place
+# (analysis.kernel_budget) so the builders here and the static checker
+# cannot drift apart; re-exported under the historical names
+from repro.analysis.kernel_budget import VMEM_BUDGET_BYTES, tile_bytes
 
 MAX_SHARDS = shd.MAX_SHARDS            # one ceiling, shared with core.sharded
 
@@ -103,9 +106,7 @@ def fits_vmem(state: Union[SkipListState, ShardedSkipList]) -> bool:
 
 
 def shard_vmem_footprint(levels: int, capacity: int, foresight: bool) -> int:
-    if foresight:
-        return levels * capacity * 2 * 4
-    return levels * capacity * 4 + capacity * 4
+    return tile_bytes(levels, capacity, foresight)
 
 
 def auto_shards(n: int, levels: int, foresight: bool = True) -> int:
@@ -192,14 +193,14 @@ def cluster_queries(boundaries: jax.Array, q_padded: jax.Array, *,
     slot = jnp.cumsum(first, axis=1) - 1             # distinct-run index
     ndist = (slot[:, -1] + 1).astype(jnp.int32)
     if k_shards == 0:
-        kmax = int(jnp.max(ndist))
+        kmax = int(jnp.max(ndist))  # trace-ok: eager auto-K only; traced callers pass k_shards
         K = 1 << (kmax - 1).bit_length() if kmax > 1 else 1
         K = min(K, S)
     else:
         K = k_shards
         try:   # an undersized explicit K would silently drop lanes
-            widest = int(jnp.max(ndist))
-        except jax.errors.ConcretizationTypeError:
+            widest = int(jnp.max(ndist))  # trace-ok: eager-only width check, guarded below
+        except jax.errors.ConcretizationTypeError:  # trace-ok: documented dual-mode — traced caller vouches for K
             widest = None                # traced: caller vouches for K
         if widest is not None and K < widest:
             # explicit raise (not assert): must survive python -O
@@ -287,7 +288,7 @@ def search_kernel_sharded(shl: ShardedSkipList, queries: jax.Array, *,
         try:
             plan = cluster_queries(shl.boundaries, q,
                                    k_shards=min(k_shards, shl.n_shards))
-        except jax.errors.ConcretizationTypeError:
+        except jax.errors.ConcretizationTypeError:  # trace-ok: documented dual-mode dispatch, dense grid is bit-identical
             cluster = False              # traced batch, no static K: dense
     if cluster:
         if shl.foresight:

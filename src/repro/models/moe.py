@@ -106,7 +106,7 @@ def moe_fwd(p: PyTree, x: jax.Array, *, top_k: int,
     if T % G or G <= 0:
         G = 1
     Tg = T // G
-    C = int(capacity_factor * Tg * top_k / E) + 1      # per-expert-per-group
+    C = int(capacity_factor * Tg * top_k / E) + 1      # per-expert-per-group  # trace-ok: static shape arithmetic on python ints
     C = ((C + 127) // 128) * 128   # lane-align; divisible by TP for "ep_ctp"
 
     xg = x.reshape(G, Tg, d)

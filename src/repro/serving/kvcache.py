@@ -136,7 +136,7 @@ class PageTable:
         keys = page_key(seq_ids.astype(np.int64),
                         block_ids.astype(np.int64)).astype(np.int32)
         ops = jnp.full((n,), sl.OP_INSERT, jnp.int32)
-        res = np.asarray(self._apply(ops, jnp.asarray(keys),
+        res = np.asarray(self._apply(ops, jnp.asarray(keys),  # trace-ok: single batched sync; result gates host-side reclaim
                                      jnp.asarray(pages)))
         if not res.all():
             # result 0 is either an upsert of an already-mapped block
@@ -158,7 +158,14 @@ class PageTable:
 
     def lookup(self, seq_ids: np.ndarray, block_ids: np.ndarray
                ) -> Tuple[jax.Array, jax.Array]:
-        """Batched page lookup -> (found, physical_pages)."""
+        """Batched page lookup -> (found, physical_pages).
+
+        Returns DEVICE arrays: no host sync happens here, so a decode loop
+        can chain lookups into downstream device work (attention gathers)
+        without a per-call round trip.  Callers that need host values
+        convert once per batch at their own boundary (as ``release``
+        does), never per element.
+        """
         self._validate_ids(seq_ids, block_ids)
         keys = jnp.asarray(page_key(seq_ids.astype(np.int64),
                                     block_ids.astype(np.int64))
@@ -180,13 +187,14 @@ class PageTable:
         found, pages = self.lookup(np.full(n_blocks, seq_id), blocks)
         ops = jnp.full((n_blocks,), sl.OP_DELETE, jnp.int32)
         self._apply(ops, jnp.asarray(keys), jnp.zeros(n_blocks, jnp.int32))
-        freed = 0
-        fnp, pnp = np.asarray(found), np.asarray(pages)
-        for f, p in zip(fnp, pnp):
-            if f:
-                self.free.append(int(p))
-                freed += 1
-        return freed
+        # ONE batched device->host sync at the eager API boundary (the free
+        # list is host state); the old per-element loop synced implicitly
+        # through python iteration over device arrays
+        fnp = np.asarray(found, bool)      # trace-ok: single batched sync at eager API boundary
+        pnp = np.asarray(pages)            # trace-ok: single batched sync at eager API boundary
+        live = pnp[fnp]
+        self.free.extend(int(p) for p in live.tolist())
+        return int(fnp.sum())
 
     @property
     def n_live(self) -> int:

@@ -1,0 +1,26 @@
+"""Fixture: host escapes inside traced-reachable functions.
+
+NOT imported by any test — the lint pass reads this source only.  Every
+violation here must be flagged by HOST-ESCAPE (see test_analysis.py).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _helper(x):
+    # reachable from the jitted seed below -> flagged
+    return x.item()
+
+
+@jax.jit
+def traced_escape(x):
+    n = int(jnp.max(x))          # flagged: int() on a traced value
+    h = _helper(x)               # makes _helper traced-reachable
+    a = np.asarray(x)            # flagged: np conversion under trace
+    return x + n + h + a.shape[0]
+
+
+def eager_only(x):
+    # NOT reachable from any traced seed -> int() here is fine
+    return int(np.max(x))

@@ -1,0 +1,22 @@
+"""Fixture: pallas_call interpret= plumbing (INTERPRET-PLUMB)."""
+import jax
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def launch_missing(x):
+    # flagged: no interpret= at all
+    return pl.pallas_call(_kernel, out_shape=x)(x)
+
+
+def launch_hardcoded(x):
+    # flagged: hard-coded True can't be turned off on real hardware
+    return pl.pallas_call(_kernel, out_shape=x, interpret=True)(x)
+
+
+def launch_threaded(x, *, interpret: bool = False):
+    # NOT flagged: caller-controlled flag
+    return pl.pallas_call(_kernel, out_shape=x, interpret=interpret)(x)

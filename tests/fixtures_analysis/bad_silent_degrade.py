@@ -1,0 +1,34 @@
+"""Fixture: silent except-and-degrade around device code (SILENT-DEGRADE)."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+
+
+def quiet_fallback(x):
+    try:
+        return jnp.sum(x)        # device code in the try body
+    except Exception:
+        return 0                 # flagged: neither raises nor warns
+
+
+def quiet_jax_error(x):
+    try:
+        return x.sum()
+    except jax.errors.ConcretizationTypeError:
+        return None              # flagged: jax error class = device context
+
+
+def loud_fallback(x):
+    try:
+        return jnp.sum(x)
+    except Exception:
+        warnings.warn("degrading to host sum")   # NOT flagged: warns
+        return 0
+
+
+def reraising(x):
+    try:
+        return jnp.sum(x)
+    except Exception as e:
+        raise RuntimeError("device sum failed") from e   # NOT flagged

@@ -1,0 +1,17 @@
+"""Fixture: trace-ok suppression syntax — all findings here are suppressed."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def line_suppressed(x):
+    n = int(jnp.max(x))  # trace-ok: fixture line-level suppression
+    return x + n
+
+
+# trace-ok: fixture def-level suppression (covers the whole body)
+@jax.jit
+def def_suppressed(x):
+    a = np.asarray(x)
+    return x + int(jnp.max(x)) + a.shape[0]
