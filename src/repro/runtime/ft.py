@@ -70,22 +70,41 @@ class InjectedFailure(RuntimeError):
 
 def run_with_restarts(train_fn: Callable[[int], int],
                       restore_fn: Callable[[], int],
-                      max_restarts: int = 3) -> Tuple[int, int]:
+                      max_restarts: int = 3, *,
+                      exceptions: Tuple[type, ...] = (InjectedFailure,),
+                      backoff_base: float = 0.0,
+                      backoff_factor: float = 2.0,
+                      backoff_cap: float = 30.0,
+                      sleep_fn: Callable[[float], None] = time.sleep
+                      ) -> Tuple[int, int]:
     """Supervise ``train_fn(start_step) -> final_step``.
 
-    On failure, call ``restore_fn() -> restored_step`` and restart from
-    there.  Returns (final_step, n_restarts).
+    On a failure matching ``exceptions`` (any exception tuple — real
+    device/runtime errors, not just the injected test failure), call
+    ``restore_fn() -> restored_step`` and restart from there, waiting
+    ``min(backoff_base * backoff_factor**(n-1), backoff_cap)`` seconds
+    before restart ``n`` — the old tight immediate-restart loop hammered
+    a still-unhealthy cluster.  ``backoff_base=0`` (the default) keeps
+    restarts immediate for tests; ``sleep_fn`` is injectable so backoff
+    is unit-testable without wall-clock sleeps.  Returns
+    (final_step, n_restarts).
     """
+    if backoff_base < 0 or backoff_factor < 1.0 or backoff_cap < 0:
+        raise ValueError("backoff_base/cap must be >= 0 and "
+                         "backoff_factor >= 1")
     restarts = 0
     step = restore_fn()
     while True:
         try:
             final = train_fn(step)
             return final, restarts
-        except InjectedFailure:
+        except exceptions:
             restarts += 1
             if restarts > max_restarts:
                 raise
+            if backoff_base > 0:
+                sleep_fn(min(backoff_base * backoff_factor ** (restarts - 1),
+                             backoff_cap))
             step = restore_fn()
 
 

@@ -25,6 +25,18 @@ Composite keys must stay inside int31: ``alloc`` / ``lookup`` / ``release``
 validate ``seq_id < MAX_SEQS`` and ``block_id < 2**BLOCK_BITS`` and raise
 ``ValueError`` on violation — out-of-range ids would wrap ``page_key``
 negative in int32 and collide with the ``KEY_MIN``/sentinel key space.
+
+Robustness (ROBUSTNESS.md): ``try_alloc`` is the soft-fail allocation
+path — it returns a per-block success mask instead of raising, granting a
+*prefix* of the requested blocks when the pool or a shard runs out, so the
+serving plane can shed/preempt/retry instead of dying.  ``alloc`` is the
+strict wrapper (raises on any failed grant) kept for callers that treat
+exhaustion as a bug.  Pool watermarks (``fill_fraction`` vs the configured
+``high_water``/``low_water``) give the engine a preemption trigger *before*
+hard exhaustion — the page-pool mirror of the PR 4/5 shard watermark
+drivers.  The ``chaos`` hook threads a ``runtime.chaos.FaultInjector``
+into the ``kvcache.alloc`` injection site (forced pool exhaustion and
+forced capacity failure).
 """
 from __future__ import annotations
 
@@ -39,6 +51,7 @@ import numpy as np
 from repro.core import sharded as shd
 from repro.core import skiplist as sl
 from repro.kernels import ops as kops
+from repro.runtime import chaos as rchaos
 
 BLOCK_BITS = 12                  # up to 4096 blocks per sequence
 MAX_SEQS = 1 << 18
@@ -60,6 +73,8 @@ class PagedCacheConfig:
     max_shards: int = 0          # static ceiling for traced rebalancing
                                  # (0 = auto: max(8, n_shards, kernel tiling))
     seed: int = 0
+    high_water: float = 0.85     # pool fill fraction: preempt above this
+    low_water: float = 0.60      # ... down to this (hysteresis band)
 
 
 class PageTable:
@@ -67,8 +82,11 @@ class PageTable:
 
     index: shd.ShardedSkipList
 
-    def __init__(self, cfg: PagedCacheConfig):
+    def __init__(self, cfg: PagedCacheConfig,
+                 chaos: "rchaos.FaultInjector | None" = None):
         self.cfg = cfg
+        self.chaos = chaos
+        shd.validate_watermarks(cfg.high_water, cfg.low_water)
         n_shards = cfg.n_shards
         if cfg.use_kernel:
             # the kernel path pins one shard tile in VMEM per grid step;
@@ -125,9 +143,39 @@ class PageTable:
 
     # -- allocation -----------------------------------------------------------
 
+    def _insert_pages(self, keys: np.ndarray, pages: np.ndarray
+                      ) -> np.ndarray:
+        """Insert key->page mappings; returns the LOST mask.
+
+        A result of 0 is either an upsert of an already-mapped block
+        (mapping updated in place; pre-existing contract — counts as a
+        success) or a capacity-failed insert (mapping LOST).  Lost pages
+        are reclaimed to the free list here, so callers only decide how
+        loudly to report them (``alloc`` raises, ``try_alloc`` masks).
+        """
+        n = len(keys)
+        ops = jnp.full((n,), sl.OP_INSERT, jnp.int32)
+        res = np.asarray(self._apply(ops, jnp.asarray(keys),  # trace-ok: single batched sync; result gates host-side reclaim
+                                     jnp.asarray(pages)))
+        lost = np.zeros(n, bool)
+        if not res.all():
+            failed = res == 0
+            still_absent = ~np.asarray(
+                shd.search_sharded(self.index, jnp.asarray(keys[failed]))[0])
+            if still_absent.any():
+                lost[np.flatnonzero(failed)[still_absent]] = True
+                for p in pages[lost]:
+                    self.free.append(int(p))
+        return lost
+
     def alloc(self, seq_ids: np.ndarray, block_ids: np.ndarray
               ) -> np.ndarray:
-        """Allocate physical pages for (seq, block) pairs; returns pages."""
+        """Allocate physical pages for (seq, block) pairs; returns pages.
+
+        Strict path: raises on pool exhaustion or a capacity-failed insert
+        (lost pages reclaimed first) — exhaustion is a caller bug here.
+        The serving plane uses ``try_alloc`` instead and degrades.
+        """
         self._validate_ids(seq_ids, block_ids)
         n = len(seq_ids)
         if n > len(self.free):
@@ -135,26 +183,51 @@ class PageTable:
         pages = np.array([self.free.pop() for _ in range(n)], np.int32)
         keys = page_key(seq_ids.astype(np.int64),
                         block_ids.astype(np.int64)).astype(np.int32)
-        ops = jnp.full((n,), sl.OP_INSERT, jnp.int32)
-        res = np.asarray(self._apply(ops, jnp.asarray(keys),  # trace-ok: single batched sync; result gates host-side reclaim
-                                     jnp.asarray(pages)))
-        if not res.all():
-            # result 0 is either an upsert of an already-mapped block
-            # (mapping updated in place; pre-existing contract) or a
-            # capacity-failed insert (mapping LOST) — only the latter leaks
-            # pages, so it must not pass silently: reclaim and raise.
-            failed = res == 0
-            still_absent = ~np.asarray(
-                shd.search_sharded(self.index, jnp.asarray(keys[failed]))[0])
-            if still_absent.any():
-                lost = np.flatnonzero(failed)[still_absent]
-                for p in pages[lost]:
-                    self.free.append(int(p))
-                raise RuntimeError(
-                    f"page-table insert failed for {lost.size} block(s): "
-                    "shard capacity exhausted (rebalance off or shards "
-                    "indivisible); their pages were returned to the pool")
+        lost = self._insert_pages(keys, pages)
+        if lost.any():
+            raise RuntimeError(
+                f"page-table insert failed for {int(lost.sum())} block(s): "
+                "shard capacity exhausted (rebalance off or shards "
+                "indivisible); their pages were returned to the pool")
         return pages
+
+    def try_alloc(self, seq_ids: np.ndarray, block_ids: np.ndarray
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+        """Soft-fail allocation: ``(ok_mask, pages)``, never raises on
+        exhaustion.
+
+        Grants a *prefix* of the request while pages last (``ok`` is
+        monotone until the first pool miss); a capacity-failed insert
+        inside the grant flips just that block's ``ok`` off (its page is
+        reclaimed).  ``pages`` holds -1 where ``ok`` is False.  Id-range
+        violations still raise ``ValueError`` — those are caller bugs,
+        not load.  This is the ``kvcache.alloc`` chaos injection site:
+        a due ``pool_exhausted`` fault forces a zero grant, a due
+        ``capacity_fail`` fault forces the whole grant to fail (pages
+        reclaimed), exactly the footprint of the real failures.
+        """
+        self._validate_ids(seq_ids, block_ids)
+        n = len(seq_ids)
+        ok = np.zeros(n, bool)
+        pages = np.full(n, -1, np.int32)
+        kinds = self.chaos.poll("kvcache.alloc") if self.chaos is not None \
+            else ()
+        grant = 0 if rchaos.POOL_EXHAUSTED in kinds else min(n,
+                                                             len(self.free))
+        if grant == 0:
+            return ok, pages
+        got = np.array([self.free.pop() for _ in range(grant)], np.int32)
+        if rchaos.CAPACITY_FAIL in kinds:
+            # forced capacity failure: mappings lost, pages reclaimed —
+            # the same observable footprint as a real shard-full insert
+            self.free.extend(int(p) for p in got)
+            return ok, pages
+        keys = page_key(seq_ids[:grant].astype(np.int64),
+                        block_ids[:grant].astype(np.int64)).astype(np.int32)
+        granted_ok = ~self._insert_pages(keys, got)
+        ok[:grant] = granted_ok
+        pages[:grant][granted_ok] = got[granted_ok]
+        return ok, pages
 
     def lookup(self, seq_ids: np.ndarray, block_ids: np.ndarray
                ) -> Tuple[jax.Array, jax.Array]:
@@ -181,7 +254,16 @@ class PageTable:
             raise ValueError(
                 f"n_blocks={n_blocks} exceeds the {1 << BLOCK_BITS}-block "
                 "per-sequence ceiling (2**BLOCK_BITS)")
-        blocks = np.arange(n_blocks, dtype=np.int64)
+        return self.release_blocks(seq_id, np.arange(n_blocks,
+                                                     dtype=np.int64))
+
+    def release_blocks(self, seq_id: int, block_ids: np.ndarray) -> int:
+        """Free specific blocks of a sequence (the non-prefix counterpart
+        of ``release``, for returning a partial ``try_alloc`` grant)."""
+        blocks = np.atleast_1d(np.asarray(block_ids, np.int64))
+        n_blocks = blocks.size
+        if n_blocks == 0:
+            return 0
         self._validate_ids(seq_id, blocks)
         keys = page_key(np.int64(seq_id), blocks).astype(np.int32)
         found, pages = self.lookup(np.full(n_blocks, seq_id), blocks)
@@ -195,6 +277,25 @@ class PageTable:
         live = pnp[fnp]
         self.free.extend(int(p) for p in live.tolist())
         return int(fnp.sum())
+
+    # -- pool pressure ---------------------------------------------------------
+
+    @property
+    def n_free(self) -> int:
+        return len(self.free)
+
+    @property
+    def fill_fraction(self) -> float:
+        return 1.0 - len(self.free) / self.cfg.n_pages
+
+    @property
+    def above_high_water(self) -> bool:
+        """Pool pressure past the preemption trigger (ROBUSTNESS.md)."""
+        return self.fill_fraction > self.cfg.high_water
+
+    @property
+    def below_low_water(self) -> bool:
+        return self.fill_fraction <= self.cfg.low_water
 
     @property
     def n_live(self) -> int:

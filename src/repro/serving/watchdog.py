@@ -1,0 +1,107 @@
+"""Invariant watchdog for the serving plane (ROBUSTNESS.md).
+
+Runs after every engine step and cross-checks the three state planes that
+chaos faults could desynchronize:
+
+* **page conservation** — ``len(free) + n_live == n_pages`` (no page is
+  both free and mapped, none vanished), and the live count equals the sum
+  of the running slots' block footprints (the engine-side accounting the
+  page table must agree with);
+* **session ↔ slot agreement** — the session table holds exactly one
+  entry per active request (queued or in a batch slot): count equality
+  plus batched membership of every active rid;
+* **sharded-index invariants** — ``core.sharded.check_sharded_invariant``
+  (foresight records, boundary sortedness, key containment, conservation)
+  on the page-table index itself.
+
+A violation is a *bug*, never load: the watchdog raises
+``WatchdogViolation`` (strict, the default) rather than logging and
+moving on — degradation paths shed requests, they must never corrupt
+state, and the chaos soak harness asserts zero violations across every
+fault schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import jax.numpy as jnp
+
+from repro.core import sharded as shd
+from repro.core import skiplist as sl
+
+
+class WatchdogViolation(AssertionError):
+    """A serving-plane invariant broke — state corruption, not load."""
+
+
+@dataclasses.dataclass
+class WatchdogReport:
+    step: int
+    ok: bool
+    failures: List[str]
+
+
+class InvariantWatchdog:
+    """Per-step invariant checker over a ``ServeEngine``."""
+
+    def __init__(self, strict: bool = True):
+        self.strict = strict
+        self.checks = 0
+        self.violations = 0
+        self.last: WatchdogReport | None = None
+
+    def check(self, engine) -> WatchdogReport:
+        failures: List[str] = []
+        pt = engine.pages
+        n_pages = pt.cfg.n_pages
+        n_live = pt.n_live
+        n_free = len(pt.free)
+
+        # page conservation: free + mapped == pool, mapped == engine view
+        if n_free + n_live != n_pages:
+            failures.append(
+                f"page conservation: free({n_free}) + live({n_live}) "
+                f"!= n_pages({n_pages})")
+        expected = sum(engine.blocks_of(r) for r in engine.slots
+                       if r is not None)
+        if n_live != expected:
+            failures.append(
+                f"page accounting: table holds {n_live} mappings but "
+                f"running slots account for {expected}")
+
+        # session-table <-> request-plane agreement
+        active = [r.rid for r in engine.slots if r is not None] \
+            + [r.rid for r in engine.queue]
+        n_sess = int(engine.sessions.n)
+        if n_sess != len(active):
+            failures.append(
+                f"session agreement: table has {n_sess} entries, "
+                f"{len(active)} active requests")
+        if active:
+            found, _ = sl.search_fast(
+                engine.sessions, jnp.asarray(active, jnp.int32))
+            if not bool(jnp.all(found)):
+                missing = [rid for rid, f in zip(active, list(found))
+                           if not bool(f)]
+                failures.append(f"session agreement: active rid(s) "
+                                f"{missing} missing from session table")
+
+        # the page-table index's own structural invariants
+        if not bool(shd.check_sharded_invariant(pt.index, expect_n=n_live)):
+            failures.append("sharded-index invariant violated on the "
+                            "page-table index")
+
+        self.checks += 1
+        report = WatchdogReport(step=engine.steps, ok=not failures,
+                                failures=failures)
+        self.last = report
+        if failures:
+            self.violations += 1
+            if self.strict:
+                raise WatchdogViolation(
+                    f"step {engine.steps}: " + "; ".join(failures))
+        return report
+
+
+__all__ = ["InvariantWatchdog", "WatchdogReport", "WatchdogViolation"]

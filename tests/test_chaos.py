@@ -1,0 +1,441 @@
+"""Chaos-hardened serving plane: fault injection, degradation, watchdog.
+
+ROBUSTNESS.md is the catalogue these tests pin down: every injected fault
+kind has a recovery path, every degradation is a structured (logged) event
+with a shed reason, the invariant watchdog stays green through all of it,
+and a seeded schedule replays to the identical outcome.
+"""
+import logging
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.models import transformer as T
+from repro.runtime import chaos as rc
+from repro.runtime import ft
+from repro.serving.engine import (EngineConfig, Request, ServeEngine,
+                                  SHED_DEADLINE, SHED_DUPLICATE,
+                                  SHED_PREEMPT_LIMIT, SHED_QUEUE_FULL,
+                                  SHED_RETRY_LIMIT)
+from repro.serving.kvcache import PagedCacheConfig, PageTable
+from repro.serving.watchdog import InvariantWatchdog, WatchdogViolation
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector / schedule mechanics
+# ---------------------------------------------------------------------------
+
+def test_fault_schedule_deterministic_by_seed():
+    a = rc.FaultSchedule.random(7, n_steps=32, n_faults=8)
+    b = rc.FaultSchedule.random(7, n_steps=32, n_faults=8)
+    c = rc.FaultSchedule.random(8, n_steps=32, n_faults=8)
+    assert a == b
+    assert a != c
+    for f in a:
+        assert f.kind in rc.SITE_KINDS[f.site]
+
+
+def test_fault_validation():
+    with pytest.raises(ValueError, match="unknown injection site"):
+        rc.Fault(step=0, site="nope", kind=rc.SLOW_STEP)
+    with pytest.raises(ValueError, match="not injectable"):
+        rc.Fault(step=0, site="kvcache.alloc", kind=rc.SLOW_STEP)
+
+
+def test_injector_latches_and_consumes():
+    inj = rc.FaultInjector([
+        rc.Fault(step=2, site="kvcache.alloc", kind=rc.POOL_EXHAUSTED),
+        rc.Fault(step=0, site="engine.decode", kind=rc.SLOW_STEP)])
+    inj.advance(0)
+    assert inj.poll("kvcache.alloc") == ()        # step-2 fault not yet due
+    inj.advance(5)                                # site not polled at 2:
+    assert inj.poll("kvcache.alloc") == (rc.POOL_EXHAUSTED,)   # latched
+    assert inj.poll("kvcache.alloc") == ()        # consumed
+    assert inj.poll("engine.decode") == (rc.SLOW_STEP,)
+    assert inj.exhausted
+    assert inj.replay_key() == ((2, "kvcache.alloc", rc.POOL_EXHAUSTED),
+                                (0, "engine.decode", rc.SLOW_STEP))
+
+
+def test_injector_fire_transient_raises():
+    inj = rc.FaultInjector([rc.Fault(step=0, site="engine.prefill",
+                                     kind=rc.TRANSIENT_DEVICE)])
+    inj.advance(0)
+    with pytest.raises(rc.TransientDeviceError):
+        inj.fire_transient("engine.prefill")
+    inj.fire_transient("engine.prefill")          # consumed: no raise
+
+
+def test_recovery_log_records_and_warns(caplog):
+    log = rc.RecoveryLog()
+    with caplog.at_level(logging.WARNING, logger="repro.chaos"):
+        log.warn(3, "shed", rid=1, reason="queue-full")
+        log.warn(4, "preempt", rid=2)
+    assert log.counts() == {"shed": 1, "preempt": 1}
+    assert log.of_kind("shed")[0].detail["reason"] == "queue-full"
+    assert log.replay_key() == ((3, "shed"), (4, "preempt"))
+    assert any("shed" in r.message for r in caplog.records)
+
+
+# ---------------------------------------------------------------------------
+# PageTable soft-fail allocation + watermarks
+# ---------------------------------------------------------------------------
+
+def test_try_alloc_grants_prefix_on_pool_shortfall():
+    pt = PageTable(PagedCacheConfig(n_pages=4))
+    ok, pages = pt.try_alloc(np.full(6, 1), np.arange(6))
+    assert ok.tolist() == [True] * 4 + [False] * 2
+    assert (pages[:4] >= 0).all() and (pages[4:] == -1).all()
+    assert pt.n_live == 4 and len(pt.free) == 0
+    # the failed tail allocated nothing: pool conserved
+    assert pt.n_live + len(pt.free) == 4
+
+
+def test_try_alloc_full_grant_and_release_blocks():
+    pt = PageTable(PagedCacheConfig(n_pages=16))
+    ok, pages = pt.try_alloc(np.full(3, 2), np.arange(3))
+    assert ok.all() and pt.n_live == 3
+    freed = pt.release_blocks(2, np.array([0, 2]))    # non-prefix return
+    assert freed == 2 and pt.n_live == 1
+    assert len(pt.free) == 15
+
+
+def test_try_alloc_forced_pool_exhaustion():
+    inj = rc.FaultInjector([rc.Fault(step=0, site="kvcache.alloc",
+                                     kind=rc.POOL_EXHAUSTED)])
+    pt = PageTable(PagedCacheConfig(n_pages=16), chaos=inj)
+    inj.advance(0)
+    ok, pages = pt.try_alloc(np.full(2, 1), np.arange(2))
+    assert not ok.any() and (pages == -1).all()
+    assert len(pt.free) == 16 and pt.n_live == 0      # nothing leaked
+    ok, _ = pt.try_alloc(np.full(2, 1), np.arange(2))  # fault consumed
+    assert ok.all()
+
+
+def test_try_alloc_forced_capacity_failure_reclaims():
+    inj = rc.FaultInjector([rc.Fault(step=0, site="kvcache.alloc",
+                                     kind=rc.CAPACITY_FAIL)])
+    pt = PageTable(PagedCacheConfig(n_pages=16), chaos=inj)
+    inj.advance(0)
+    ok, _ = pt.try_alloc(np.full(2, 1), np.arange(2))
+    assert not ok.any()
+    assert len(pt.free) == 16 and pt.n_live == 0      # pages reclaimed
+
+
+def test_pool_watermark_properties():
+    pt = PageTable(PagedCacheConfig(n_pages=10, high_water=0.8,
+                                    low_water=0.5))
+    assert pt.fill_fraction == 0.0 and pt.below_low_water
+    pt.alloc(np.full(9, 1), np.arange(9))
+    assert pt.above_high_water and not pt.below_low_water
+    pt.release(1, 9)
+    assert pt.below_low_water
+    with pytest.raises(ValueError, match="high_water"):
+        PageTable(PagedCacheConfig(n_pages=8, high_water=0.3))
+
+
+# ---------------------------------------------------------------------------
+# run_with_restarts generalization
+# ---------------------------------------------------------------------------
+
+def test_run_with_restarts_custom_exceptions_and_backoff():
+    calls = {"n": 0}
+    sleeps = []
+
+    def flaky(start):
+        calls["n"] += 1
+        if calls["n"] < 4:
+            raise ConnectionError("transient")
+        return start + 1
+
+    final, restarts = ft.run_with_restarts(
+        flaky, lambda: 0, max_restarts=5,
+        exceptions=(ConnectionError,), backoff_base=0.5, backoff_factor=2.0,
+        backoff_cap=1.5, sleep_fn=sleeps.append)
+    assert final == 1 and restarts == 3
+    assert sleeps == [0.5, 1.0, 1.5]              # doubled, then capped
+
+
+def test_run_with_restarts_unlisted_exception_propagates():
+    def boom(start):
+        raise KeyError("not retryable")
+    with pytest.raises(KeyError):
+        ft.run_with_restarts(boom, lambda: 0,
+                             exceptions=(ft.InjectedFailure,))
+
+
+def test_run_with_restarts_validates_backoff():
+    with pytest.raises(ValueError, match="backoff"):
+        ft.run_with_restarts(lambda s: s, lambda: 0, backoff_factor=0.5)
+
+
+# ---------------------------------------------------------------------------
+# Engine degradation paths
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def smoke():
+    cfg = get_smoke("llama3_8b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _req(rid, rng, n=8, **kw):
+    cfg = get_smoke("llama3_8b")
+    return Request(rid=rid, prompt=rng.integers(0, cfg.vocab, n,
+                                                dtype=np.int32), **kw)
+
+
+def test_submit_rejects_duplicate_rid(smoke):
+    cfg, params = smoke
+    eng = ServeEngine(cfg, params, EngineConfig(batch_slots=1, max_len=64))
+    rng = np.random.default_rng(0)
+    first = _req(5, rng, max_new=3)
+    assert eng.submit(first)
+    dup = _req(5, rng, max_new=3)
+    assert not eng.submit(dup)
+    assert dup.status == "shed" and dup.shed_reason == SHED_DUPLICATE
+    eng.run(max_steps=30)
+    # the first request was untouched by the rejection and completed
+    assert first.status == "done" and len(first.out) == 3
+    assert int(eng.sessions.n) == 0 and eng.pages.n_live == 0
+    # a completed rid may be reused
+    assert eng.submit(_req(5, rng, max_new=2))
+
+
+def test_submit_sheds_on_queue_full_and_bad_requests(smoke):
+    cfg, params = smoke
+    eng = ServeEngine(cfg, params, EngineConfig(batch_slots=1, max_len=64,
+                                                max_queue=2))
+    rng = np.random.default_rng(1)
+    assert eng.submit(_req(1, rng)) and eng.submit(_req(2, rng))
+    over = _req(3, rng)
+    assert not eng.submit(over)
+    assert over.shed_reason == SHED_QUEUE_FULL
+    bad_rid = _req(-1, rng)
+    assert not eng.submit(bad_rid)
+    assert bad_rid.shed_reason == "invalid-rid"
+    too_long = _req(4, rng, n=60, max_new=16)     # 60 + 16 > max_len=64
+    assert not eng.submit(too_long)
+    assert too_long.shed_reason == "prompt-too-long"
+    assert eng.log.counts()["shed"] == 3
+
+
+def test_admission_reserves_pages_before_prefill(smoke):
+    """Satellite regression: a forced alloc failure at admission must
+    leave the request cleanly QUEUED — no spliced cache slot, no stranded
+    session entry, no leaked pages (the pre-fix ordering allocated after
+    prefill+splice, stranding a half-admitted slot on failure)."""
+    cfg, params = smoke
+    inj = rc.FaultInjector([rc.Fault(step=0, site="kvcache.alloc",
+                                     kind=rc.POOL_EXHAUSTED)])
+    eng = ServeEngine(cfg, params, EngineConfig(batch_slots=1, max_len=64),
+                      chaos=inj)
+    rng = np.random.default_rng(2)
+    req = _req(1, rng, max_new=3)
+    eng.submit(req)
+    eng.step()                                    # admission hits the fault
+    assert req.status == "queued" and eng.slots[0] is None
+    assert eng.pages.n_live == 0                  # nothing allocated
+    assert int(eng.sessions.n) == 1               # queued entry, not strand
+    assert eng.log.counts()["admit-retry"] == 1
+    eng.run(max_steps=30)                         # fault consumed: recovers
+    assert req.status == "done" and len(req.out) == 3
+    assert eng.pages.n_live == 0 and int(eng.sessions.n) == 0
+
+
+def test_transient_faults_retry_and_output_is_unchanged(smoke):
+    """Transient prefill/decode faults delay but never corrupt: the final
+    greedy output must be identical to a fault-free run."""
+    cfg, params = smoke
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab, 8, dtype=np.int32)
+
+    ref_eng = ServeEngine(cfg, params, EngineConfig(batch_slots=1,
+                                                    max_len=64))
+    ref = Request(rid=1, prompt=prompt, max_new=5)
+    ref_eng.submit(ref)
+    ref_eng.run(max_steps=30)
+
+    inj = rc.FaultInjector([
+        rc.Fault(step=0, site="engine.prefill", kind=rc.TRANSIENT_DEVICE),
+        rc.Fault(step=2, site="engine.decode", kind=rc.TRANSIENT_DEVICE),
+        rc.Fault(step=3, site="engine.decode", kind=rc.SLOW_STEP)])
+    eng = ServeEngine(cfg, params, EngineConfig(batch_slots=1, max_len=64),
+                      chaos=inj)
+    req = Request(rid=1, prompt=prompt, max_new=5)
+    eng.submit(req)
+    eng.run(max_steps=40)
+    assert req.status == "done"
+    assert req.out == ref.out                     # degradation, not damage
+    counts = eng.log.counts()
+    assert counts.get("device-retry", 0) >= 2 and counts.get("stall", 0) == 1
+    assert inj.exhausted
+    assert eng.watchdog.violations == 0
+
+
+def test_persistent_alloc_failure_sheds_with_retry_limit(smoke):
+    cfg, params = smoke
+    faults = [rc.Fault(step=s, site="kvcache.alloc", kind=rc.POOL_EXHAUSTED)
+              for s in range(12)]
+    eng = ServeEngine(cfg, params,
+                      EngineConfig(batch_slots=1, max_len=64,
+                                   max_admit_retries=2), chaos=faults and
+                      rc.FaultInjector(faults))
+    rng = np.random.default_rng(4)
+    req = _req(1, rng, max_new=3)
+    eng.submit(req)
+    eng.run(max_steps=40)
+    assert req.status == "shed" and req.shed_reason == SHED_RETRY_LIMIT
+    assert eng.pages.n_live == 0 and int(eng.sessions.n) == 0
+    assert eng.watchdog.violations == 0
+
+
+def test_deadline_sheds_running_and_queued(smoke):
+    cfg, params = smoke
+    eng = ServeEngine(cfg, params, EngineConfig(batch_slots=1, max_len=64))
+    rng = np.random.default_rng(5)
+    runner = _req(1, rng, max_new=12, deadline_steps=4)
+    queued = _req(2, rng, max_new=3, deadline_steps=2)
+    eng.submit(runner)
+    eng.submit(queued)                            # blocked behind runner
+    eng.run(max_steps=40)
+    assert runner.status == "shed" and runner.shed_reason == SHED_DEADLINE
+    assert len(runner.out) < 12                   # cut off mid-generation
+    assert queued.status == "shed" and queued.shed_reason == SHED_DEADLINE
+    assert eng.pages.n_live == 0 and int(eng.sessions.n) == 0
+    assert eng.watchdog.violations == 0
+
+
+def test_pressure_preemption_evicts_young_for_old(smoke):
+    """Pool sized for one sequence, two requests submitted the same step
+    with the YOUNGER age-priority key admitted first (larger rid ties the
+    same submit step): the watermark driver preempts it for the older
+    queued head, both finish, pages conserved throughout."""
+    cfg, params = smoke
+    eng = ServeEngine(cfg, params,
+                      EngineConfig(batch_slots=2, max_len=64, pool_pages=1))
+    rng = np.random.default_rng(6)
+    young = _req(7, rng, max_new=3)               # submitted first, admits
+    old = _req(3, rng, max_new=3)                 # smaller rid: higher prio
+    eng.submit(young)
+    eng.submit(old)
+    eng.run(max_steps=60)
+    assert young.status == "done" and old.status == "done"
+    assert young.n_preempted >= 1
+    assert eng.log.counts().get("preempt", 0) >= 1
+    assert len(young.out) == 3 and len(old.out) == 3
+    assert eng.pages.n_live == 0 and int(eng.sessions.n) == 0
+    assert eng.watchdog.violations == 0
+
+
+def test_preemption_limit_sheds(smoke):
+    cfg, params = smoke
+    eng = ServeEngine(cfg, params,
+                      EngineConfig(batch_slots=2, max_len=64, pool_pages=1,
+                                   max_preemptions=0))
+    rng = np.random.default_rng(7)
+    young = _req(9, rng, max_new=3)
+    old = _req(2, rng, max_new=3)
+    eng.submit(young)
+    eng.submit(old)
+    eng.run(max_steps=60)
+    assert young.status == "shed" and \
+        young.shed_reason == SHED_PREEMPT_LIMIT
+    assert old.status == "done" and len(old.out) == 3
+    assert eng.pages.n_live == 0 and int(eng.sessions.n) == 0
+
+
+# ---------------------------------------------------------------------------
+# Watchdog
+# ---------------------------------------------------------------------------
+
+def test_watchdog_green_on_healthy_engine(smoke):
+    cfg, params = smoke
+    eng = ServeEngine(cfg, params, EngineConfig(batch_slots=1, max_len=64))
+    rng = np.random.default_rng(8)
+    eng.submit(_req(1, rng, max_new=3))
+    eng.run(max_steps=20)
+    assert eng.watchdog.checks > 0 and eng.watchdog.violations == 0
+
+
+def test_watchdog_catches_page_leak(smoke):
+    cfg, params = smoke
+    eng = ServeEngine(cfg, params, EngineConfig(batch_slots=1, max_len=64))
+    rng = np.random.default_rng(9)
+    eng.submit(_req(1, rng, max_new=6))
+    eng.step()
+    eng.pages.free.pop()                          # simulate a leaked page
+    with pytest.raises(WatchdogViolation, match="page conservation"):
+        eng.step()
+    # non-strict mode reports instead of raising
+    soft = InvariantWatchdog(strict=False)
+    report = soft.check(eng)
+    assert not report.ok and soft.violations == 1
+    assert any("page conservation" in f for f in report.failures)
+
+
+def test_watchdog_catches_session_disagreement(smoke):
+    cfg, params = smoke
+    eng = ServeEngine(cfg, params, EngineConfig(batch_slots=1, max_len=64))
+    rng = np.random.default_rng(10)
+    eng.submit(_req(1, rng, max_new=6))
+    eng.step()
+    import jax.numpy as jnp
+    from repro.core import skiplist as sl
+    eng.sessions, _ = sl.delete(eng.sessions, jnp.int32(1))  # corrupt
+    with pytest.raises(WatchdogViolation, match="session agreement"):
+        eng.step()
+
+
+# ---------------------------------------------------------------------------
+# Seeded chaos soak (quick lane; the full sweep runs in fig_chaos_soak)
+# ---------------------------------------------------------------------------
+
+def _soak_one(seed: int, smoke):
+    cfg, params = smoke
+    inj = rc.FaultInjector.from_seed(seed, n_steps=24, n_faults=5)
+    eng = ServeEngine(cfg, params,
+                      EngineConfig(batch_slots=2, max_len=64, max_queue=8),
+                      chaos=inj)
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for rid in range(5):
+        r = Request(rid=rid + 1,
+                    prompt=rng.integers(0, cfg.vocab, 4 + int(
+                        rng.integers(8)), dtype=np.int32),
+                    max_new=2 + int(rng.integers(4)),
+                    deadline_steps=(40 if rid % 2 else None))
+        reqs.append(r)
+        eng.submit(r)
+    eng.run(max_steps=80)
+    return eng, reqs
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_chaos_soak_quick(seed, smoke):
+    eng, reqs = _soak_one(seed, smoke)
+    # every submitted request is terminal: done, or shed with a reason
+    for r in reqs:
+        assert r.terminal, f"rid {r.rid} stuck in {r.status}"
+        if r.status == "shed":
+            assert r.shed_reason
+    # zero leaks, full agreement, watchdog green on every step
+    assert eng.pages.n_live == 0
+    assert len(eng.pages.free) == eng.pages.cfg.n_pages
+    assert int(eng.sessions.n) == 0
+    assert eng.watchdog.checks >= eng.steps
+    assert eng.watchdog.violations == 0
+
+
+def test_chaos_soak_replays_identically(smoke):
+    """Same seed => same schedule => same outcome, token for token."""
+    a_eng, a_reqs = _soak_one(5, smoke)
+    b_eng, b_reqs = _soak_one(5, smoke)
+    assert a_eng.chaos.replay_key() == b_eng.chaos.replay_key()
+    assert a_eng.log.replay_key() == b_eng.log.replay_key()
+    for ra, rb in zip(a_reqs, b_reqs):
+        assert (ra.status, ra.shed_reason, ra.out) == \
+            (rb.status, rb.shed_reason, rb.out)

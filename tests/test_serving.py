@@ -145,6 +145,31 @@ def test_engine_continuous_batching_admits_from_queue():
     assert eng.pages.n_live == 0
 
 
+def test_engine_max_new_counts_prefill_token():
+    """Pin the max_new accounting contract: the prefill-produced first
+    token COUNTS toward max_new, so a request yields exactly max_new new
+    tokens total but consumes only max_new - 1 decode steps.  (This was
+    an undocumented off-by-one trap: anyone assuming max_new decode
+    steps over-budgets deadlines and page lifetimes by one step.)"""
+    cfg = get_smoke("llama3_8b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(7)
+    for max_new in (1, 5):
+        eng = ServeEngine(cfg, params, EngineConfig(batch_slots=1,
+                                                    max_len=64))
+        req = Request(rid=1, prompt=rng.integers(0, cfg.vocab, 8,
+                                                 dtype=np.int32),
+                      max_new=max_new)
+        eng.submit(req)
+        eng.run(max_steps=50)
+        assert req.status == "done"
+        assert len(req.out) == max_new          # total tokens == max_new
+        # ... in max_new - 1 decode steps: the first token came from the
+        # prefill argmax at admission, not from a decode step (max_new=1
+        # completes at admission itself — one engine tick, zero decodes)
+        assert eng.steps == max(1, max_new - 1)
+
+
 def test_engine_decode_matches_manual_decode():
     """Engine greedy output == manual prefill+decode for the same prompt."""
     cfg = get_smoke("llama3_8b")
