@@ -7,6 +7,9 @@ Prints ``name,us_per_call,derived`` CSV rows (the harness contract).
   fig6   — 128-lane size sweep                   (paper Figs. 6/7)
   fig8   — dependent-gather / node-access counters (paper Fig. 8 / App. A)
   skew   — Zipf-routed sharded launch: dense vs clustered DMA (beyond-paper)
+  mesh   — mesh-distributed index: per-device HBM + lane balance (beyond-
+           paper; multi-device cases need the XLA_FLAGS forced host
+           devices, else only D=1 runs — the standalone module sets them)
   macro  — YCSB A/B/C + TPC-C-like store workloads (paper Figs. 9/10)
 
 Roofline/dry-run numbers live in results/ (benchmarks.roofline), not here —
@@ -21,7 +24,8 @@ import time
 def main() -> None:
     from benchmarks import (fig3_sequential, fig4_batch_sweep,
                             fig6_size_sweep, fig8_access_counters,
-                            fig_shard_skew, fig_sync_modes, macro_store)
+                            fig_mesh_index, fig_shard_skew, fig_sync_modes,
+                            macro_store)
 
     suites = [
         ("fig3", fig3_sequential.run),
@@ -29,6 +33,7 @@ def main() -> None:
         ("fig6", fig6_size_sweep.run),
         ("fig8", fig8_access_counters.run),
         ("skew", fig_shard_skew.run),
+        ("mesh", fig_mesh_index.run),
         ("sync", fig_sync_modes.run),
         ("macro", macro_store.run),
     ]

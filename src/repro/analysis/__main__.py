@@ -48,7 +48,10 @@ def main(argv=None) -> int:
     audited, checked = [], []
     if "lint" in passes:
         from repro.analysis.lint import run_lint
+        from repro.analysis.trace_audit import audit_coverage
         findings.extend(run_lint(root))
+        # AUDIT-GAP rides the lint pass: pure AST, no jax import needed
+        findings.extend(audit_coverage(str(root)))
     if "trace" in passes:
         from repro.analysis.trace_audit import run_trace_audit
         fs, audited = run_trace_audit()

@@ -15,6 +15,8 @@ trace audit (jaxpr-level, ``trace_audit``)
   TRACE-CALLBACK   host-callback primitive inside a traced entry point
   TRACE-DYNSHAPE   non-static output shape on a traced entry point
   TRACE-RETRACE    a jitted path retraced more than once per shape bucket
+  AUDIT-GAP        a public @jax.jit symbol in core//kernels/ absent from
+                   the hand-listed audit entry points (coverage shrink)
 
 AST lint (source-level, ``lint``)
   HOST-ESCAPE      int()/float()/bool()/.item()/np.asarray in a function
@@ -41,6 +43,8 @@ RULES = {
     "TRACE-CALLBACK": "host-callback primitive inside a traced entry point",
     "TRACE-DYNSHAPE": "non-static output shape on a traced entry point",
     "TRACE-RETRACE": "jitted path retraced more than once per shape bucket",
+    "AUDIT-GAP": "public @jax.jit symbol absent from the trace-audit "
+                 "entry-point list",
     "HOST-ESCAPE": "host round-trip call reachable from a traced context",
     "SILENT-DEGRADE": "except block around device code neither raises nor "
                       "warns",

@@ -279,6 +279,76 @@ def _build_versioned(which: str):
     return fn, {"b8": [(ops, k, v), (ops, k + 50, v)]}
 
 
+def _mesh_fixture():
+    """A 1-device index mesh + small mesh index: the collective data path
+    traces identically at any D, and D=1 runs on the default CPU device,
+    so the audit stays hardware-independent."""
+    import jax.numpy as jnp
+    from repro.core import mesh_index as mi
+    from repro.launch.mesh import make_index_mesh
+
+    mesh = make_index_mesh(1)
+    n = 64
+    keys = jnp.arange(1, n + 1, dtype=jnp.int32) * 5
+    vals = jnp.arange(n, dtype=jnp.int32)
+    mx = mi.build_mesh_index(keys, vals, n_devices=1, n_shards=4, levels=4)
+    return mesh, mx
+
+
+def _build_mesh(which: str):
+    import jax.numpy as jnp
+    from repro.core import mesh_index as mi
+
+    mesh, mx = _mesh_fixture()
+
+    if which == "search":
+        def fn(local, db, q):
+            return mi.search_mesh(mi.MeshShardedIndex(local, db), q,
+                                  mesh=mesh)
+
+        return fn, {
+            "q128": [(mx.local, mx.device_boundaries,
+                      jnp.full((128,), 30, jnp.int32)),
+                     (mx.local, mx.device_boundaries,
+                      jnp.full((128,), 95, jnp.int32))],
+            "q64": [(mx.local, mx.device_boundaries,
+                     jnp.full((64,), 30, jnp.int32))],
+        }
+
+    if which == "kernel":
+        from repro.kernels import mesh_launch as ml
+
+        def fn(local, db, q):
+            return ml.search_kernel_mesh(mi.MeshShardedIndex(local, db), q,
+                                         mesh=mesh, interpret=True)
+
+        return fn, {
+            "q128": [(mx.local, mx.device_boundaries,
+                      jnp.full((128,), 30, jnp.int32)),
+                     (mx.local, mx.device_boundaries,
+                      jnp.full((128,), 95, jnp.int32))],
+        }
+
+    # apply path, with device-local rebalancing on (the serving config)
+    from repro.core import skiplist as sl
+    emp = mi.empty_mesh_index(n_devices=1, n_shards=4, capacity=64,
+                              levels=4, key_span=1 << 20)
+
+    def fn(local, db, op_types, keys, vals):
+        return mi.apply_ops_mesh(mi.MeshShardedIndex(local, db),
+                                 op_types, keys, vals, mesh=mesh,
+                                 rebalance=True, seed=0)
+
+    k = jnp.arange(1, 9, dtype=jnp.int32)
+    v = jnp.arange(8, dtype=jnp.int32)
+    ins = jnp.full((8,), sl.OP_INSERT, jnp.int32)
+    rd = jnp.full((8,), sl.OP_READ, jnp.int32)
+    return fn, {"b8": [
+        (emp.local, emp.device_boundaries, ins, k, v),
+        (emp.local, emp.device_boundaries, ins, k + 100, v),
+        (emp.local, emp.device_boundaries, rd, k, v)]}
+
+
 def default_entry_points() -> List[EntryPoint]:
     import functools
     eps = [
@@ -305,6 +375,14 @@ def default_entry_points() -> List[EntryPoint]:
         EntryPoint("VersionedIndex.update",
                    "src/repro/core/versioned.py",
                    functools.partial(_build_versioned, "update")),
+        EntryPoint("search_mesh[jnp]", "src/repro/core/mesh_index.py",
+                   functools.partial(_build_mesh, "search")),
+        EntryPoint("apply_ops_mesh[rebalance]",
+                   "src/repro/core/mesh_index.py",
+                   functools.partial(_build_mesh, "apply")),
+        EntryPoint("search_kernel_mesh[fg,clustered]",
+                   "src/repro/kernels/mesh_launch.py",
+                   functools.partial(_build_mesh, "kernel")),
     ]
     return eps
 
@@ -320,3 +398,93 @@ def run_trace_audit(entry_points: Optional[Sequence[EntryPoint]] = None
         audited.append(ep.name)
         findings.extend(audit_entry(ep))
     return findings, audited
+
+
+# ---------------------------------------------------------------------------
+# Audit-coverage lint (AUDIT-GAP): the hand-listed entry points must not
+# silently fall behind the code
+# ---------------------------------------------------------------------------
+
+#: jitted public symbols in core// kernels/ that are deliberately NOT audit
+#: entry points — each with the reason the audit does not need them directly
+AUDIT_EXEMPT = {
+    "build": "bulk constructor — one call per index lifetime, not a "
+             "serving-path entry point",
+    "build_sharded": "bulk constructor — one call per index lifetime",
+    "shard_state": "one-shot monolithic->sharded converter, build-time only",
+    "foresight_traverse": "kernel wrapper launched (and trace-audited) via "
+                          "search_kernel",
+    "base_traverse": "kernel wrapper launched via search_kernel",
+    "foresight_traverse_sharded": "kernel wrapper launched via the audited "
+                                  "search_kernel_sharded entry points",
+    "base_traverse_sharded": "kernel wrapper launched via the audited "
+                             "search_kernel_sharded entry points",
+    "foresight_traverse_clustered": "kernel wrapper launched via the "
+                                    "audited search_kernel_sharded entry "
+                                    "points",
+    "base_traverse_clustered": "kernel wrapper launched via the audited "
+                               "search_kernel_sharded entry points",
+    "validated_traverse": "kernel wrapper launched via the audited "
+                          "VersionedIndex.read_view().search entry point",
+}
+
+#: directories whose @jax.jit publics must be audited or exempted
+AUDIT_SCOPE = ("src/repro/core", "src/repro/kernels")
+
+
+def audited_symbols() -> set:
+    """Entry-point names with their ``[variant]`` suffixes stripped."""
+    return {ep.name.split("[")[0].split("(")[0].rstrip(".")
+            for ep in default_entry_points()}
+
+
+def audit_coverage(root: str) -> List[Finding]:
+    """AUDIT-GAP: flag ``@jax.jit`` public symbols missing from the audit.
+
+    The trace audit runs over a HAND-LISTED set of entry points, so its
+    coverage silently shrinks as jitted entry points are added.  This
+    pure-AST pass scans ``core/`` and ``kernels/`` for public (non-
+    underscore) functions whose decorators mention ``jax.jit`` (either
+    ``@jax.jit`` or ``@functools.partial(jax.jit, ...)``) and fails when
+    one is neither in ``default_entry_points()`` (bracket variants
+    stripped) nor in ``AUDIT_EXEMPT`` with a recorded reason.  Method
+    qualnames match on their trailing name (the entry-point list names
+    ``PageTable._apply``-style paths).
+    """
+    import ast
+    import os
+
+    covered = audited_symbols()
+    covered_tails = {c.split(".")[-1] for c in covered}
+    out: List[Finding] = []
+    for scope in AUDIT_SCOPE:
+        base = os.path.join(root, scope)
+        if not os.path.isdir(base):
+            continue
+        for fname in sorted(os.listdir(base)):
+            if not fname.endswith(".py"):
+                continue
+            path = os.path.join(base, fname)
+            rel = os.path.join(scope, fname)
+            with open(path, "r", encoding="utf-8") as fh:
+                tree = ast.parse(fh.read(), filename=path)
+            for node in ast.walk(tree):
+                if not isinstance(node, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)):
+                    continue
+                if node.name.startswith("_"):
+                    continue
+                if not any("jax.jit" in ast.unparse(d)
+                           for d in node.decorator_list):
+                    continue
+                if (node.name in covered or node.name in covered_tails
+                        or node.name in AUDIT_EXEMPT):
+                    continue
+                out.append(Finding(
+                    rule="AUDIT-GAP", path=rel, line=node.lineno,
+                    symbol=node.name,
+                    message=f"public @jax.jit symbol `{node.name}` is not "
+                            "in trace_audit.default_entry_points() — add "
+                            "an EntryPoint or an AUDIT_EXEMPT entry with "
+                            "a reason"))
+    return out

@@ -38,7 +38,7 @@ signalled-failure contract applies to any insert past a shard's capacity.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -49,6 +49,46 @@ from repro.core.skiplist import (KEY_MAX, NULL_VAL, OP_INSERT, build, empty,
 from repro.core.sharded import (HIGH_WATER, LOW_WATER, RebalanceStats,
                                 ShardedSkipList, route, search_sharded,
                                 validate_watermarks)
+
+
+class DeviceLoadStats(NamedTuple):
+    """Cross-device load observability for the mesh-distributed index.
+
+    Rebalancing under ``shard_map`` is DEVICE-LOCAL by design: each
+    device's splits and merges stay inside its own static shard ceiling,
+    and the device boundary vector is fixed at build time, so keys never
+    migrate across devices.  Sustained key-space skew therefore cannot be
+    absorbed silently — it must be *surfaced*, as these counters, so the
+    serving plane can schedule the amortized fix (a host-side
+    re-partition / rebuild, the mesh analogue of ``sharded.repack``).
+    """
+
+    live: jax.Array             # [D] int32 — live keys per device
+    routed: jax.Array           # [D] int32 — batch lanes routed per device
+    live_imbalance: jax.Array   # f32 scalar — max/mean live load (1.0 = even)
+    routed_imbalance: jax.Array  # f32 scalar — max/mean routed lanes
+
+
+def cross_device_load(live: jax.Array, routed: jax.Array) -> DeviceLoadStats:
+    """Fold per-device live/routed counts into :class:`DeviceLoadStats`.
+
+    ``max * D / total`` per counter; an empty index or batch reports 1.0
+    (perfectly even) rather than dividing by zero.  Fully traced — the
+    mesh apply path computes this inside ``jit`` and returns it alongside
+    results instead of acting on it.
+    """
+    live = live.astype(jnp.int32)
+    routed = routed.astype(jnp.int32)
+    D = live.shape[0]
+
+    def ratio(c):
+        tot = jnp.sum(c)
+        r = jnp.max(c).astype(jnp.float32) * D / jnp.maximum(tot, 1)
+        return jnp.where(tot > 0, r, jnp.float32(1.0))
+
+    return DeviceLoadStats(live=live, routed=routed,
+                           live_imbalance=ratio(live),
+                           routed_imbalance=ratio(routed))
 
 
 def live_shard_count(shl: ShardedSkipList) -> jax.Array:

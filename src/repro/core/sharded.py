@@ -136,6 +136,23 @@ def shard_capacity_for(n: int, n_shards: int) -> int:
     return max(8, 1 << (2 * m + 4 - 1).bit_length())
 
 
+def partition_boundaries(sorted_keys: jax.Array, stride: int) -> jax.Array:
+    """Boundary vector of a stride partition over padded sorted keys.
+
+    ``sorted_keys`` must be non-decreasing with dead slots padded to
+    ``KEY_MAX`` as a suffix; slice ``p`` owns ``sorted_keys[p*stride :
+    (p+1)*stride]``.  Returns ``[len // stride]`` int32 lower bounds with
+    slot 0 pinned to ``KEY_MIN`` (the first slice owns ``(-inf, b[1])``)
+    and all-dead slices degenerating to ``KEY_MAX`` so routing never
+    selects them.  This is the ONE partition rule shared by the per-shard
+    boundaries of ``build_sharded`` and the per-device boundary vector of
+    ``core.mesh_index`` — both layers route with the same
+    ``searchsorted`` over a vector produced here.
+    """
+    b = sorted_keys[::stride].astype(jnp.int32)
+    return b.at[0].set(KEY_MIN)
+
+
 @functools.partial(jax.jit, static_argnames=("n_shards", "capacity", "levels",
                                              "foresight"))
 def build_sharded(keys: jax.Array, vals: jax.Array, *, n_shards: int,
@@ -177,8 +194,8 @@ def build_sharded(keys: jax.Array, vals: jax.Array, *, n_shards: int,
                             foresight=foresight, seed=seed + s, valid=sm))
     stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
 
-    boundaries = keys[::m]                        # first key of each shard
-    boundaries = boundaries.at[0].set(KEY_MIN)    # shard 0 owns (-inf, b1)
+    # first key of each shard; shard 0 owns (-inf, b1)
+    boundaries = partition_boundaries(keys, m)
     return ShardedSkipList(shards=stacked, boundaries=boundaries)
 
 

@@ -217,6 +217,43 @@ def cluster_queries(boundaries: jax.Array, q_padded: jax.Array, *,
     return ClusterPlan(q_sorted, sid_sorted, inv, block_sids, ndist)
 
 
+def plan_degeneration_split(ndist, n_shards: int):  # trace-ok: eager auto-K planning only — the caller guards on isinstance(ndist, Tracer)
+    """Split a clustered plan's blocks into a small-K set and stragglers.
+
+    The auto-sized K is the max distinct-shard count over ALL blocks, so
+    ONE straggler block (a sparse Zipf tail straddling every shard) snaps
+    the whole grid back to the dense ``(nblk, S)`` size — the clustered
+    launch degenerates even though every other block touches 1-2 shards.
+    This planner picks the power-of-two ``k < K`` minimizing the grid-step
+    cost ``n_keep * k + n_straggler * S`` (a straggler block runs through
+    the dense grid, whose per-block cost is ``S``); when no ``k`` beats
+    the single clustered launch it returns ``None``.
+
+    Returns ``None`` or ``(k_small, keep_rows, straggler_rows)`` with the
+    row index arrays concrete (host) — eager auto-K planning only, which
+    is exactly where the degeneration bites (an explicit static
+    ``k_shards`` already caps the grid by contract).
+    """
+    nd = np.asarray(ndist)
+    nblk = int(nd.size)
+    if nblk == 0:
+        return None
+    kmax = int(nd.max())
+    k_full = min(1 << (kmax - 1).bit_length() if kmax > 1 else 1, n_shards)
+    best_cost = nblk * k_full
+    best = None
+    k = 1
+    while k < k_full:
+        strag = nd > k
+        n_s = int(strag.sum())
+        cost = (nblk - n_s) * k + n_s * n_shards
+        if cost < best_cost:
+            best_cost = cost
+            best = (k, np.flatnonzero(~strag), np.flatnonzero(strag))
+        k <<= 1
+    return best
+
+
 def dma_model_tile_loads(block_sids: jax.Array) -> int:
     """Tiles DMA'd by the clustered launch under revisited-tile coalescing.
 
@@ -244,6 +281,55 @@ def dma_model_bytes(shl: ShardedSkipList, n_queries: int,
     if block_sids is None:
         return nblk * shl.n_shards * tile
     return dma_model_tile_loads(block_sids) * tile
+
+
+def _degenerate_launch(shl: ShardedSkipList, plan: ClusterPlan, split, *,
+                       max_steps: int, interpret: bool
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Dual launch for a degeneration-split plan: clustered small-K grid
+    for the keep blocks, dense mini-grid for the straggler blocks.
+
+    Both sub-launches run existing kernels unchanged; results are
+    scattered back by block row, so the sorted-order output is
+    bit-identical to one full-K clustered launch.  Truncating
+    ``block_sids`` to ``k_small`` columns is sound for keep blocks: their
+    distinct count fits, and padding slots only repeat the last shard.
+    """
+    k_small, keep, strag = split
+    nblk = plan.block_sids.shape[0]
+    qs = plan.q_sorted.reshape(nblk, QBLK)
+    ss = plan.sid_sorted.reshape(nblk, QBLK)
+    keep_j = jnp.asarray(keep, jnp.int32)
+    strag_j = jnp.asarray(strag, jnp.int32)
+    node_s = jnp.zeros((nblk, QBLK), jnp.int32)
+    ckey_s = jnp.zeros((nblk, QBLK), jnp.int32)
+
+    bs = plan.block_sids[keep_j][:, :k_small]
+    nd = plan.ndist[keep_j]
+    qk, sk = qs[keep_j].reshape(-1), ss[keep_j].reshape(-1)
+    if shl.foresight:
+        nk, ck = foresight_traverse_clustered(
+            shl.shards.fused, bs, nd, sk, qk, max_steps=max_steps,
+            interpret=interpret)
+    else:
+        nk, ck = base_traverse_clustered(
+            shl.shards.nxt, shl.shards.keys, bs, nd, sk, qk,
+            max_steps=max_steps, interpret=interpret)
+    node_s = node_s.at[keep_j].set(nk.reshape(-1, QBLK))
+    ckey_s = ckey_s.at[keep_j].set(ck.reshape(-1, QBLK))
+
+    qd, sd = qs[strag_j].reshape(-1), ss[strag_j].reshape(-1)
+    if shl.foresight:
+        nn, cn = foresight_traverse_sharded(
+            shl.shards.fused, sd, qd, max_steps=max_steps,
+            interpret=interpret)
+    else:
+        nn, cn = base_traverse_sharded(
+            shl.shards.nxt, shl.shards.keys, sd, qd, max_steps=max_steps,
+            interpret=interpret)
+    node_s = node_s.at[strag_j].set(nn.reshape(-1, QBLK))
+    ckey_s = ckey_s.at[strag_j].set(cn.reshape(-1, QBLK))
+    return node_s.reshape(-1), ckey_s.reshape(-1)
 
 
 def search_kernel_sharded(shl: ShardedSkipList, queries: jax.Array, *,
@@ -291,7 +377,16 @@ def search_kernel_sharded(shl: ShardedSkipList, queries: jax.Array, *,
         except jax.errors.ConcretizationTypeError:  # trace-ok: documented dual-mode dispatch, dense grid is bit-identical
             cluster = False              # traced batch, no static K: dense
     if cluster:
-        if shl.foresight:
+        split = None
+        if k_shards == 0 and not isinstance(plan.ndist, jax.core.Tracer):
+            # eager auto-K: one straggler block must not snap K (and the
+            # grid) back to the dense size for every other block
+            split = plan_degeneration_split(plan.ndist, shl.n_shards)
+        if split is not None:
+            node, ckey = _degenerate_launch(shl, plan, split,
+                                            max_steps=max_steps,
+                                            interpret=interpret)
+        elif shl.foresight:
             node, ckey = foresight_traverse_clustered(
                 shl.shards.fused, plan.block_sids, plan.ndist,
                 plan.sid_sorted, plan.q_sorted, max_steps=max_steps,
@@ -342,11 +437,13 @@ def search_kernel_sharded(shl: ShardedSkipList, queries: jax.Array, *,
 def search_kernel(state: Union[SkipListState, ShardedSkipList],
                   queries: jax.Array, *, max_steps: int = 0,
                   interpret: bool = True, cluster: bool = True,
-                  k_shards: int = 0) -> KernelSearchResult:
-    """Kernel-backed batched search on either variant; resolves found/vals.
+                  k_shards: int = 0, mesh=None) -> KernelSearchResult:
+    """Kernel-backed batched search on any variant; resolves found/vals.
 
-    Auto-dispatch: a ``ShardedSkipList`` takes the sharded key-space path;
-    a monolithic state takes the single-tile kernel and must fit the VMEM
+    Auto-dispatch: a ``MeshShardedIndex`` takes the mesh-distributed path
+    (``mesh`` required — the 1-D index mesh the state was partitioned
+    for); a ``ShardedSkipList`` takes the sharded key-space path; a
+    monolithic state takes the single-tile kernel and must fit the VMEM
     budget.  The historical oversized-monolith auto-reshard (an identity-
     keyed conversion cache plus a ``DeprecationWarning``) is gone: it
     rebuilt the whole partition on every new state object, and rebalancing
@@ -354,6 +451,15 @@ def search_kernel(state: Union[SkipListState, ShardedSkipList],
     ``ShardedSkipList`` directly instead (``shard_state`` converts once;
     ``core.sharded.build_sharded`` builds one from scratch).
     """
+    from repro.core.mesh_index import MeshShardedIndex
+    if isinstance(state, MeshShardedIndex):
+        if mesh is None:
+            raise ValueError("search_kernel on a MeshShardedIndex needs "
+                             "mesh= (see launch.mesh.make_index_mesh)")
+        from repro.kernels.mesh_launch import search_kernel_mesh
+        return search_kernel_mesh(state, queries, max_steps=max_steps,
+                                  interpret=interpret, k_shards=k_shards,
+                                  mesh=mesh)
     if isinstance(state, ShardedSkipList):
         return search_kernel_sharded(state, queries, max_steps=max_steps,
                                      interpret=interpret, cluster=cluster,

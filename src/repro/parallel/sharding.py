@@ -22,9 +22,40 @@ from typing import Optional, Tuple
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.launch.mesh import dp_axes, dp_size
+from repro.launch.mesh import INDEX_AXIS, dp_axes, dp_size
 
 TP_LOGICAL = ("vocab", "ffn", "heads", "inner")
+
+
+# ---------------------------------------------------------------------------
+# The mesh-distributed index ("index" axis) — specs for core.mesh_index
+# ---------------------------------------------------------------------------
+#
+# The distributed skiplist is NOT a model tensor: its pytree leaves all
+# carry a leading per-device axis and its batches split along the same
+# axis, so the specs are fixed rather than policy-derived.  They live here
+# so every PartitionSpec in the repo — model and index alike — comes from
+# one module.
+
+def index_state_spec() -> P:
+    """Spec for the stacked index pytree: leading [D] axis per leaf."""
+    return P(INDEX_AXIS)
+
+
+def index_batch_spec() -> P:
+    """Spec for a [D * C] lane batch, split into per-device [C] chunks."""
+    return P(INDEX_AXIS)
+
+
+def index_replicated_spec() -> P:
+    """Spec for globally replicated values (e.g. device_boundaries)."""
+    return P()
+
+
+def index_state_sharding(mesh: Mesh, tree):
+    """NamedSharding tree placing an index pytree along the index axis."""
+    return jax.tree.map(
+        lambda _: NamedSharding(mesh, index_state_spec()), tree)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -26,6 +26,18 @@ validate ``seq_id < MAX_SEQS`` and ``block_id < 2**BLOCK_BITS`` and raise
 ``ValueError`` on violation — out-of-range ids would wrap ``page_key``
 negative in int32 and collide with the ``KEY_MIN``/sentinel key space.
 
+Mesh opt-in: past a size threshold (or forced via ``mesh_devices``) the
+table is held as a ``core.mesh_index.MeshShardedIndex`` instead — the key
+space is range-partitioned across the devices of a 1-D ``("index",)``
+mesh and every apply/lookup goes through the ``shard_map`` +
+``all_to_all`` data path, which is bit-identical to the single-device
+table on the same op stream.  The composite page-key space is dense in
+``[0, MAX_SEQS << BLOCK_BITS)``, so the uniform static device partition
+of ``empty_mesh_index`` balances devices by construction.  Per-device
+shard capacity is sized for the FULL pool, so a seq-id-skewed workload
+can never lose a mapping to the partition (it costs headroom, not
+correctness); cross-device skew is surfaced through ``load_stats``.
+
 Robustness (ROBUSTNESS.md): ``try_alloc`` is the soft-fail allocation
 path — it returns a per-block success mask instead of raising, granting a
 *prefix* of the requested blocks when the pool or a shard runs out, so the
@@ -48,9 +60,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import mesh_index as mshi
 from repro.core import sharded as shd
 from repro.core import skiplist as sl
 from repro.kernels import ops as kops
+from repro.launch import mesh as lmesh
 from repro.runtime import chaos as rchaos
 
 BLOCK_BITS = 12                  # up to 4096 blocks per sequence
@@ -74,7 +88,12 @@ class PagedCacheConfig:
                                  # (0 = auto: max(8, n_shards, kernel tiling))
     seed: int = 0
     high_water: float = 0.85     # pool fill fraction: preempt above this
-    low_water: float = 0.60      # ... down to this (hysteresis band)
+    low_water: float = 0.60     # ... down to this (hysteresis band)
+    mesh_devices: int = 1        # 1 = single-device table; >=2 = force a
+                                 # D-device mesh table; 0 = auto (mesh on
+                                 # all devices once n_pages crosses
+                                 # mesh_min_pages AND >1 device exists)
+    mesh_min_pages: int = 1 << 16  # auto-mode size threshold
 
 
 class PageTable:
@@ -101,16 +120,36 @@ class PageTable:
             cap = shd.shard_capacity_for(cfg.n_pages, n_shards)
         else:
             cap = int(2 ** np.ceil(np.log2(cfg.n_pages * 2 + 4)))
-        self.index = shd.empty_sharded(
-            n_shards=n_shards, capacity=cap, levels=cfg.levels,
-            foresight=cfg.foresight, seed=cfg.seed)
+        n_dev = cfg.mesh_devices
+        if n_dev == 0:       # auto: mesh once the table outgrows a device
+            n_dev = len(jax.devices()) if cfg.n_pages >= cfg.mesh_min_pages \
+                else 1
+        self.mesh = None
+        self.load_stats = None   # last apply's DeviceLoadStats (mesh only)
+        if n_dev > 1:
+            # make_index_mesh validates n_dev against jax.devices() and
+            # raises (never silently shrinks) when the topology is short
+            self.mesh = lmesh.make_index_mesh(n_dev)
+            # capacity sized for the FULL pool on every device: a seq-id
+            # skewed stream may land everything on one device slice, and
+            # losing mappings to the static partition would turn load
+            # into corruption.  Costs headroom, never correctness.
+            self.index = mshi.empty_mesh_index(
+                n_devices=n_dev, n_shards=n_shards, capacity=cap,
+                levels=cfg.levels, foresight=cfg.foresight, seed=cfg.seed,
+                key_span=MAX_SEQS << BLOCK_BITS)
+        else:
+            self.index = shd.empty_sharded(
+                n_shards=n_shards, capacity=cap, levels=cfg.levels,
+                foresight=cfg.foresight, seed=cfg.seed)
         self.free = list(range(cfg.n_pages - 1, -1, -1))
         # one compiled apply at the shard ceiling; rebalance/seed are
         # baked in statically, batch shapes pow2-padded by _apply.  The
         # input index state is donated — _apply unconditionally replaces
         # self.index with the result, so the old buffers (a full table at
-        # the ceiling) can be reused instead of held alive alongside it
-        self._jit_apply = jax.jit(
+        # the ceiling) can be reused instead of held alive alongside it.
+        # (The mesh path jits inside apply_ops_mesh, cached per mesh.)
+        self._jit_apply = None if self.mesh is not None else jax.jit(
             functools.partial(shd.apply_ops_sharded, rebalance=cfg.rebalance,
                               seed=cfg.seed),
             donate_argnums=(0,))
@@ -124,8 +163,20 @@ class PageTable:
                                                  jnp.int32)])
             keys = jnp.concatenate([keys, jnp.zeros((pad,), jnp.int32)])
             vals = jnp.concatenate([vals, jnp.zeros((pad,), jnp.int32)])
-        self.index, results = self._jit_apply(self.index, ops, keys, vals)
+        if self.mesh is not None:
+            self.index, results, self.load_stats = mshi.apply_ops_mesh(
+                self.index, ops, keys, vals, mesh=self.mesh,
+                rebalance=self.cfg.rebalance, seed=self.cfg.seed)
+        else:
+            self.index, results = self._jit_apply(self.index, ops, keys,
+                                                  vals)
         return results[:n]
+
+    def _search(self, keys: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        """Traversal-loop lookup on whichever table variant is live."""
+        if self.mesh is not None:
+            return mshi.search_mesh(self.index, keys, mesh=self.mesh)
+        return shd.search_sharded(self.index, keys)
 
     def _validate_ids(self, seq_ids, block_ids) -> None:
         seq = np.atleast_1d(np.asarray(seq_ids, np.int64))
@@ -161,7 +212,7 @@ class PageTable:
         if not res.all():
             failed = res == 0
             still_absent = ~np.asarray(
-                shd.search_sharded(self.index, jnp.asarray(keys[failed]))[0])
+                self._search(jnp.asarray(keys[failed]))[0])
             if still_absent.any():
                 lost[np.flatnonzero(failed)[still_absent]] = True
                 for p in pages[lost]:
@@ -244,9 +295,9 @@ class PageTable:
                                     block_ids.astype(np.int64))
                            .astype(np.int32))
         if self.cfg.use_kernel:
-            r = kops.search_kernel(self.index, keys)
+            r = kops.search_kernel(self.index, keys, mesh=self.mesh)
             return r.found, r.vals
-        return shd.search_sharded(self.index, keys)
+        return self._search(keys)
 
     def release(self, seq_id: int, n_blocks: int) -> int:
         """Free all pages of a finished sequence (ordered range delete)."""
@@ -299,4 +350,6 @@ class PageTable:
 
     @property
     def n_live(self) -> int:
+        if self.mesh is not None:
+            return int(mshi.total_n_mesh(self.index))
         return int(shd.total_n(self.index))

@@ -27,6 +27,7 @@ from typing import List
 
 import jax.numpy as jnp
 
+from repro.core import mesh_index as mshi
 from repro.core import sharded as shd
 from repro.core import skiplist as sl
 
@@ -87,8 +88,14 @@ class InvariantWatchdog:
                 failures.append(f"session agreement: active rid(s) "
                                 f"{missing} missing from session table")
 
-        # the page-table index's own structural invariants
-        if not bool(shd.check_sharded_invariant(pt.index, expect_n=n_live)):
+        # the page-table index's own structural invariants (mesh tables
+        # additionally check the device partition + key containment)
+        if isinstance(pt.index, mshi.MeshShardedIndex):
+            index_ok = mshi.check_mesh_invariant(pt.index, expect_n=n_live)
+        else:
+            index_ok = shd.check_sharded_invariant(pt.index,
+                                                   expect_n=n_live)
+        if not bool(index_ok):
             failures.append("sharded-index invariant violated on the "
                             "page-table index")
 

@@ -331,3 +331,36 @@ def test_clean_tree_kernel_budget_fully_baselined():
             "_foresight_sharded_kernel", "_base_sharded_kernel",
             "_foresight_clustered_kernel", "_base_clustered_kernel",
             "_validated_kernel"} <= set(checked)
+
+
+# ---------------------------------------------------------------------------
+# AUDIT-GAP: the trace-audit entry-point list must cover every public jit
+# ---------------------------------------------------------------------------
+
+def test_audit_gap_fires_on_unlisted_public_jit(tmp_path):
+    from repro.analysis.trace_audit import audit_coverage
+    pkg = tmp_path / "src" / "repro" / "core"
+    pkg.mkdir(parents=True)
+    (pkg / "newapi.py").write_text(
+        "import jax\n\n"
+        "@jax.jit\ndef shiny_public_path(x):\n    return x\n\n"
+        "@jax.jit\ndef _private_path(x):\n    return x\n")
+    fs = audit_coverage(str(tmp_path))
+    gaps = [f for f in fs if f.rule == "AUDIT-GAP"]
+    assert [f.symbol for f in gaps] == ["shiny_public_path"]
+    assert "trace-audit" in gaps[0].message or "entry" in gaps[0].message
+
+
+def test_audit_gap_clean_tree_and_exemptions_carry_reasons():
+    from repro.analysis.trace_audit import AUDIT_EXEMPT, audit_coverage
+    fs = audit_coverage(str(REPO))
+    assert not fs, "\n".join(f.render() for f in fs)
+    assert all(isinstance(r, str) and r for r in AUDIT_EXEMPT.values())
+
+
+def test_audit_covers_mesh_entry_points():
+    from repro.analysis.trace_audit import audited_symbols
+    names = audited_symbols()
+    assert "search_mesh" in names
+    assert "apply_ops_mesh" in names
+    assert "search_kernel_mesh" in names

@@ -299,3 +299,71 @@ def test_search_kernel_sharded_after_rebalance_shard_count_change():
     f, v = shd.search_sharded(shl2, q)
     np.testing.assert_array_equal(np.asarray(after.found), np.asarray(f))
     np.testing.assert_array_equal(np.asarray(after.vals), np.asarray(v))
+
+
+# ---------------------------------------------------------------------------
+# K-degeneration: one straggler block must not snap the grid to (nblk, S)
+# ---------------------------------------------------------------------------
+
+def _straddle_stream(shl, n_blocks=4, tail_per_shard=2):
+    """A batch whose LAST sorted block straddles every shard.
+
+    Blocks 0..n-2 are pure shard-0 traffic (ndist 1); a sparse tail of
+    ``tail_per_shard`` lanes per remaining shard lands in the final block
+    (ndist == S).  Without the degeneration split this single block snaps
+    auto-K — and with it the whole ``(nblk, K)`` grid — to the dense S.
+    """
+    b = np.asarray(shl.boundaries).astype(np.int64)
+    S = shl.n_shards
+    n_tail = tail_per_shard * (S - 1)
+    n_hot = n_blocks * QBLK - n_tail
+    rng = np.random.default_rng(99)
+    hot = rng.integers(0, b[1], n_hot)             # shard 0's key range
+    tail = np.concatenate([
+        np.linspace(b[i], (b[i + 1] if i + 1 < S else b[-1] + 2) - 1,
+                    tail_per_shard, dtype=np.int64)
+        for i in range(1, S)])
+    return jnp.asarray(np.concatenate([hot, tail]).astype(np.int32))
+
+
+def test_degeneration_split_rescues_straggler_block():
+    """S = 9 (not a power of two): the split keeps K small for the hot
+    blocks and routes only the straggler through the dense mini-grid."""
+    shl8, _, _ = _index(n_shards=8)
+    shl = shd.split_shard(shl8, 0)                 # S = 9, non-pow2
+    S = shl.n_shards
+    assert S == 9
+    q = _straddle_stream(shl)
+    plan = kops.cluster_queries(shl.boundaries, kops._pad(q)[0])
+    nd = np.asarray(plan.ndist)
+    assert nd[-1] == S and (nd[:-1] <= 2).all()    # the straddle shape
+    assert plan.block_sids.shape[1] == S           # auto-K DID degenerate
+    split = kops.plan_degeneration_split(plan.ndist, S)
+    assert split is not None                       # ... and the fix bites
+    k_small, keep, strag = split
+    assert k_small < S and strag.tolist() == [len(nd) - 1]
+    assert keep.tolist() == list(range(len(nd) - 1))
+    # modeled grid-step cost beats the degenerate single launch
+    assert len(keep) * k_small + len(strag) * S < len(nd) * S
+    # and the dual launch stays bit-identical to dense + jnp reference
+    _assert_clustered_matches(shl, q)
+
+
+@pytest.mark.parametrize("foresight", [True, False])
+def test_degeneration_split_bit_identical_both_variants(foresight):
+    shl, _, _ = _index(n_shards=8, foresight=foresight)
+    q = _straddle_stream(shl, n_blocks=3)
+    plan = kops.cluster_queries(shl.boundaries, kops._pad(q)[0])
+    assert kops.plan_degeneration_split(plan.ndist, shl.n_shards) is not None
+    _assert_clustered_matches(shl, q)
+
+
+def test_degeneration_split_declines_when_uniform():
+    """No straggler -> no split: a uniformly narrow plan keeps ONE
+    clustered launch (splitting would only add a second dispatch)."""
+    shl, keys, _ = _index(n_shards=8)
+    b = np.asarray(shl.boundaries)
+    inside = keys[(keys >= int(b[2])) & (keys < int(b[3]))]
+    q = np.resize(inside, 2 * QBLK).astype(np.int32)
+    plan = kops.cluster_queries(shl.boundaries, jnp.asarray(q))
+    assert kops.plan_degeneration_split(plan.ndist, shl.n_shards) is None
