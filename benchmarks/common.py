@@ -24,15 +24,22 @@ def bench(fn: Callable, *args, iters: int = 20, warmup: int = 3) -> float:
 
 
 def build_list(n: int, *, foresight: bool, levels: int = 0, seed: int = 0,
-               key_span: int = 0) -> Tuple[sl.SkipListState, np.ndarray]:
-    """Synchrobench convention: key range = 2x initial size."""
+               key_span: int = 0, node_width: int = 1
+               ) -> Tuple[sl.SkipListState, np.ndarray]:
+    """Synchrobench convention: key range = 2x initial size.
+
+    ``node_width`` > 1 builds the fat layout; capacity then counts node
+    slots (same 2x headroom over the packed-run count).
+    """
     span = key_span or 2 * n
     levels = levels or max(4, int(np.ceil(np.log2(n))) + 2)
     rng = np.random.default_rng(seed)
     keys = np.sort(rng.choice(span, n, replace=False)).astype(np.int32)
-    cap = int(2 ** np.ceil(np.log2(n * 2 + 4)))
+    slots = sl.node_slots_for(n, node_width)
+    cap = int(2 ** np.ceil(np.log2(slots * 2 + 4)))
     st = sl.build(jnp.asarray(keys), jnp.asarray(keys), capacity=cap,
-                  levels=levels, foresight=foresight, seed=seed)
+                  levels=levels, foresight=foresight, seed=seed,
+                  node_width=node_width)
     return st, keys
 
 

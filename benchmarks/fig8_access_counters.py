@@ -41,6 +41,21 @@ def run() -> list:
         red = 1 - stats[True][0] / stats[False][0]
         rows.append(csv_row(f"fig8/size={n}/gather_reduction", 0.0,
                             f"reduction_pct={red*100:.1f}"))
+        # fat layout: one TILE gather serves a whole node run, so the
+        # counter drops again — bytes_per_op charges the full lane tile
+        # (8 B fused record + 4 B x node_width key lanes) per tile gather
+        for nw in (32, 128):
+            stf, _ = build_list(n, foresight=True, node_width=nw)
+            q = uniform_queries(2 * n, BATCH)
+            resf = sl.search(stf, q)
+            g = float(resf.gathers) / BATCH
+            rows.append(csv_row(
+                f"fig8/size={n}/fat_B={nw}", 0.0,
+                f"tile_gathers_per_op={g:.2f};"
+                f"bytes_per_op={g * (8 + 4 * nw):.1f};"
+                f"steps={int(resf.steps)};"
+                f"reduction_vs_foresight_pct="
+                f"{(1 - g / stats[True][0]) * 100:.1f}"))
 
     # paper-analysis counter: distinct node accesses (python oracle)
     rng = np.random.default_rng(0)

@@ -1,0 +1,133 @@
+"""Fat-node width sweep: one gather per lane-tile of comparisons.
+
+Sweeps the node width B over {1, 8, 32, 128} on the paper's fig4
+(batch sweep, fixed size) and fig6 (size sweep, 128 lanes) workloads.
+B = 1 is the scalar seed layout — the differential oracle every fat
+point must match bit-for-bit (asserted here on every configuration).
+
+Reported per point:
+
+* ``depth_bound`` — ``traversal_bound(levels, capacity)``, the modeled
+  dependent-gather chain of the kernel launch.  Capacity counts NODE
+  slots, so packing ~B/2 keys per node shrinks the bound ~B/2-fold;
+  the acceptance criterion is a >= 4x reduction at B = 128 on the fig6
+  sizes (dominated by the capacity term once lists outgrow the tower).
+* ``steps`` / ``gathers`` — the measured traversal-loop iteration count
+  and tile-gather counter of ``core.search`` (one fat gather serves a
+  whole node run, so ``gathers`` counts tiles, not lanes — see fig8).
+* ``tile_bytes`` — modeled VMEM-resident index tile of the monolithic
+  kernel launch (fused levels + the ``[cap, B]`` key plane); recorded as
+  ``fits_vmem`` per point, and asserted under the 16 MiB ceiling at the
+  acceptance width B = 128 (narrow widths still overflow at the fig6
+  cliff size — the skip structure over 4x more node slots dominates).
+* ``us_per_call`` — ``core.search`` wall time (interpret-mode trend).
+
+``python -m benchmarks.fig_fat_node`` records the sweep to
+``BENCH_fat_node.json`` as a regression snapshot.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench, build_list, csv_row, uniform_queries
+from repro.analysis.kernel_budget import TOTAL_VMEM_BYTES, tile_bytes
+from repro.core import skiplist as sl
+from repro.kernels.foresight_traverse import traversal_bound
+
+WIDTHS = [1, 8, 32, 128]
+FIG4_N = 2**13
+FIG4_BATCHES = [128, 1024]
+FIG6_SIZES = [2**9, 2**13, 2**17]
+FIG6_BATCH = 128
+
+_SNAPSHOT = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_fat_node.json")
+
+
+def _point(n: int, batch: int, nw: int, tag: str, ref=None):
+    """One (size, batch, width) measurement; checks fat == scalar."""
+    st, keys = build_list(n, foresight=True, node_width=nw)
+    q = uniform_queries(2 * n, batch)
+    res = sl.search(st, q)
+    if ref is not None:
+        assert bool(jnp.array_equal(res.found, ref.found)), (tag, nw)
+        assert bool(jnp.array_equal(
+            jnp.where(res.found, res.vals, -1),
+            jnp.where(ref.found, ref.vals, -1))), (tag, nw)
+    t = bench(lambda s, qq: sl.search(s, qq).found, st, q, iters=5,
+              warmup=2)
+    depth = traversal_bound(st.levels, st.capacity)
+    tb = tile_bytes(st.levels, st.capacity, True, node_width=nw)
+    # the scalar seed overflows VMEM past the fig6 cliff (that forces the
+    # sharded launch), and B=8 only shaves 4x off the node count — still
+    # over at n=2**17.  The acceptance width B=128 must fit everywhere.
+    if nw == 128:
+        assert tb < TOTAL_VMEM_BYTES, \
+            f"{tag} B={nw}: modeled tile {tb} B exceeds VMEM"
+    point = {
+        "workload": tag, "n": n, "batch": batch, "node_width": nw,
+        "levels": st.levels, "capacity": int(st.capacity),
+        "depth_bound": int(depth), "steps": int(res.steps),
+        "gathers_per_op": float(res.gathers) / batch,
+        "tile_bytes": int(tb), "fits_vmem": bool(tb < TOTAL_VMEM_BYTES),
+        "us_per_call": t * 1e6,
+    }
+    row = csv_row(
+        f"fatnode/{tag}/B={nw}", t / batch * 1e6,
+        f"depth_bound={depth};steps={int(res.steps)};"
+        f"gathers_per_op={point['gathers_per_op']:.2f};"
+        f"tile_bytes={tb};cap={int(st.capacity)}")
+    return point, row, res
+
+
+def run() -> list:
+    rows, snap = [], []
+    for batch in FIG4_BATCHES:
+        ref = None
+        base_depth = None
+        for nw in WIDTHS:
+            p, row, res = _point(FIG4_N, batch, nw, f"fig4/batch={batch}",
+                                 ref)
+            if nw == 1:
+                ref, base_depth = res, p["depth_bound"]
+            p["depth_reduction"] = round(base_depth / p["depth_bound"], 2)
+            snap.append(p)
+            rows.append(row)
+    for n in FIG6_SIZES:
+        ref = None
+        base_depth = None
+        for nw in WIDTHS:
+            p, row, res = _point(n, FIG6_BATCH, nw, f"fig6/size={n}", ref)
+            if nw == 1:
+                ref, base_depth = res, p["depth_bound"]
+            p["depth_reduction"] = round(base_depth / p["depth_bound"], 2)
+            snap.append(p)
+            rows.append(row)
+            if nw == 128:
+                assert p["depth_reduction"] >= 4.0, \
+                    f"size={n}: depth reduction {p['depth_reduction']} < 4x"
+                rows.append(csv_row(
+                    f"fatnode/fig6/size={n}/depth_reduction", 0.0,
+                    f"ratio={p['depth_reduction']};"
+                    f"bound_scalar={base_depth};"
+                    f"bound_fat={p['depth_bound']}"))
+    run.snapshot = snap
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    for r in rows:
+        print(r)
+    with open(_SNAPSHOT, "w") as f:
+        json.dump(run.snapshot, f, indent=2)
+        f.write("\n")
+    print(f"# snapshot -> {_SNAPSHOT}")
+
+
+if __name__ == "__main__":
+    main()

@@ -6,6 +6,8 @@ Prints ``name,us_per_call,derived`` CSV rows (the harness contract).
   fig4   — lane-batch ("thread") sweep           (paper Figs. 4/5)
   fig6   — 128-lane size sweep                   (paper Figs. 6/7)
   fig8   — dependent-gather / node-access counters (paper Fig. 8 / App. A)
+  fatnode — node-width sweep B ∈ {1,8,32,128}: modeled gather depth, tile
+           bytes, scalar-vs-fat bit-equivalence (beyond-paper layout)
   skew   — Zipf-routed sharded launch: dense vs clustered DMA (beyond-paper)
   mesh   — mesh-distributed index: per-device HBM + lane balance (beyond-
            paper; multi-device cases need the XLA_FLAGS forced host
@@ -24,14 +26,15 @@ import time
 def main() -> None:
     from benchmarks import (fig3_sequential, fig4_batch_sweep,
                             fig6_size_sweep, fig8_access_counters,
-                            fig_mesh_index, fig_shard_skew, fig_sync_modes,
-                            macro_store)
+                            fig_fat_node, fig_mesh_index, fig_shard_skew,
+                            fig_sync_modes, macro_store)
 
     suites = [
         ("fig3", fig3_sequential.run),
         ("fig4", fig4_batch_sweep.run),
         ("fig6", fig6_size_sweep.run),
         ("fig8", fig8_access_counters.run),
+        ("fatnode", fig_fat_node.run),
         ("skew", fig_shard_skew.run),
         ("mesh", fig_mesh_index.run),
         ("sync", fig_sync_modes.run),

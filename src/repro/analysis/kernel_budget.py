@@ -55,27 +55,36 @@ VMEM_BUDGET_BYTES = 12 * 1024 * 1024  # index-tile budget (headroom for I/O
                                       # blocks and compiler temporaries)
 
 
-def tile_bytes(levels: int, capacity: int, foresight: bool) -> int:
+def tile_bytes(levels: int, capacity: int, foresight: bool,
+               node_width: int = 1) -> int:
     """Bytes one skiplist index tile occupies in VMEM.
 
     foresight: ``levels * capacity`` fused (ptr, key) int32 pairs;
     base: ``levels * capacity`` int32 pointers + ``capacity`` int32 keys.
+    Fat layout (``node_width`` > 1) adds the ``fat_keys`` run tile
+    (``capacity * node_width`` int32) — ``capacity`` counts NODE slots
+    there, so for a fixed element count the skip tables shrink by the
+    fill factor while the run tile holds the elements themselves
+    (``fat_vals`` never ships to a kernel; values resolve outside).
     This is THE estimator — ``kernels.ops.shard_vmem_footprint`` and the
     store's monolithic-tile check both delegate here, so the builder and
     the checker cannot disagree about what fits.
     """
-    if foresight:
-        return levels * capacity * 2 * 4
-    return levels * capacity * 4 + capacity * 4
+    base = (levels * capacity * 2 * 4 if foresight
+            else levels * capacity * 4 + capacity * 4)
+    if node_width > 1:
+        base += capacity * node_width * 4
+    return base
 
 
 def max_capacity_under_budget(levels: int, foresight: bool,
-                              budget: int = VMEM_BUDGET_BYTES) -> int:
+                              budget: int = VMEM_BUDGET_BYTES,
+                              node_width: int = 1) -> int:
     """Largest power-of-two capacity whose tile fits ``budget`` — the
     worst tile any builder path (``auto_shards`` / ``shard_capacity_for``,
     both power-of-two) can actually emit."""
     cap = 8
-    while tile_bytes(levels, cap * 2, foresight) <= budget:
+    while tile_bytes(levels, cap * 2, foresight, node_width) <= budget:
         cap *= 2
     return cap
 
@@ -469,5 +478,66 @@ def probe_repo_kernels() -> Tuple[List[Finding], List[str]]:
             nd = np.asarray([2, 1], np.int32)
             run(ft.base_traverse_clustered, nxtS, keysS, jnp.asarray(bs),
                 jnp.asarray(nd), jnp.zeros((B,), jnp.int32), q,
+                prefetch=(bs, nd), ndist=nd)
+
+    # ---- fat-node sweeps (node_width > 1): the run tile rides along ------
+    # Small concrete sweep: a real clustered plan over a fat sharded index
+    # (exercises the fat [1, cap, nw] BlockSpec + DMA-skip on padding).
+    nw = 8
+    keys8 = jnp.arange(1, 41, dtype=jnp.int32) * 7
+    vals8 = jnp.arange(40, dtype=jnp.int32)
+    for foresight in (True, False):
+        shl = shd.build_sharded(keys8, vals8, n_shards=4, levels=4,
+                                foresight=foresight, seed=0, node_width=nw)
+        qf = jnp.concatenate([jnp.full((3 * QBLK,), 14, jnp.int32),
+                              jnp.full((QBLK,), int(keys8[-1]), jnp.int32)])
+        plan = kops.cluster_queries(shl.boundaries, qf, k_shards=2)
+        sidf = shd.route(shl.boundaries, qf)
+        if foresight:
+            run(ft.foresight_traverse_clustered, shl.shards.fused,
+                plan.block_sids, plan.ndist, plan.sid_sorted, plan.q_sorted,
+                shl.shards.fat_keys, plan=plan)
+            run(ft.foresight_traverse_sharded, shl.shards.fused, sidf, qf,
+                shl.shards.fat_keys)
+        else:
+            run(ft.base_traverse_clustered, shl.shards.nxt, shl.shards.keys,
+                plan.block_sids, plan.ndist, plan.sid_sorted, plan.q_sorted,
+                shl.shards.fat_keys, plan=plan)
+            run(ft.base_traverse_sharded, shl.shards.nxt, shl.shards.keys,
+                sidf, qf, shl.shards.fat_keys)
+
+    # Production-maximal fat sweep at node_width = QBLK.  Sized to fit the
+    # TOTAL budget even double-buffered (budget = TOTAL/2): capacity counts
+    # node slots, so a fitting fat tile still serves node_width-fold more
+    # elements than the scalar maximal tile above — the fat layout's whole
+    # point — and the gate stays green with no new baselined findings.
+    nw = QBLK
+    for foresight in (True, False):
+        cap_f = max_capacity_under_budget(L, foresight,
+                                          TOTAL_VMEM_BYTES // 2,
+                                          node_width=nw)
+        fatk1 = jnp.zeros((cap_f, nw), jnp.int32)
+        fatkS = jnp.zeros((2, cap_f, nw), jnp.int32)
+        bs = np.asarray([[0, 1], [1, 1]], np.int32)
+        nd = np.asarray([2, 1], np.int32)
+        if foresight:
+            fused1 = jnp.zeros((L, cap_f, 2), jnp.int32)
+            run(ft.foresight_traverse, fused1, q, fatk1)
+            fusedS = jnp.zeros((2, L, cap_f, 2), jnp.int32)
+            run(ft.foresight_traverse_sharded, fusedS,
+                jnp.zeros((B,), jnp.int32), q, fatkS)
+            run(ft.foresight_traverse_clustered, fusedS, jnp.asarray(bs),
+                jnp.asarray(nd), jnp.zeros((B,), jnp.int32), q, fatkS,
+                prefetch=(bs, nd), ndist=nd)
+        else:
+            nxt1 = jnp.zeros((L, cap_f), jnp.int32)
+            keys1 = jnp.zeros((cap_f,), jnp.int32)
+            run(ft.base_traverse, nxt1, keys1, q, fatk1)
+            nxtS = jnp.zeros((2, L, cap_f), jnp.int32)
+            keysS = jnp.zeros((2, cap_f), jnp.int32)
+            run(ft.base_traverse_sharded, nxtS, keysS,
+                jnp.zeros((B,), jnp.int32), q, fatkS)
+            run(ft.base_traverse_clustered, nxtS, keysS, jnp.asarray(bs),
+                jnp.asarray(nd), jnp.zeros((B,), jnp.int32), q, fatkS,
                 prefetch=(bs, nd), ndist=nd)
     return findings, checked

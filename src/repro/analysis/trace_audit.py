@@ -140,7 +140,8 @@ def audit_entry(ep: EntryPoint) -> List[Finding]:
 # Repo entry points
 # ---------------------------------------------------------------------------
 
-def _build_search_sharded(foresight: bool, cluster: bool):
+def _build_search_sharded(foresight: bool, cluster: bool,
+                          node_width: int = 1):
     import jax.numpy as jnp
     from repro.core import sharded as shd
     from repro.kernels import ops as kops
@@ -149,7 +150,8 @@ def _build_search_sharded(foresight: bool, cluster: bool):
     keys = jnp.arange(1, n + 1, dtype=jnp.int32) * 5
     vals = jnp.arange(n, dtype=jnp.int32)
     shl = shd.build_sharded(keys, vals, n_shards=S, levels=levels,
-                            foresight=foresight, seed=0)
+                            foresight=foresight, seed=0,
+                            node_width=node_width)
 
     def fn(q):
         return kops.search_kernel_sharded(
@@ -361,6 +363,12 @@ def default_entry_points() -> List[EntryPoint]:
         EntryPoint("search_kernel_sharded[base,clustered]",
                    "src/repro/kernels/ops.py",
                    functools.partial(_build_search_sharded, False, True)),
+        EntryPoint("search_kernel_sharded[fg,clustered,fat]",
+                   "src/repro/kernels/ops.py",
+                   functools.partial(_build_search_sharded, True, True, 8)),
+        EntryPoint("search_kernel_sharded[fg,plain,fat]",
+                   "src/repro/kernels/ops.py",
+                   functools.partial(_build_search_sharded, True, False, 8)),
         EntryPoint("watermark_rebalance_traced",
                    "src/repro/core/rebalance_traced.py",
                    functools.partial(_build_rebalance, "watermark")),

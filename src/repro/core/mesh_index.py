@@ -97,6 +97,10 @@ class MeshShardedIndex(NamedTuple):
     def foresight(self) -> bool:
         return self.local.shards.fused is not None
 
+    @property
+    def node_width(self) -> int:
+        return self.local.node_width
+
 
 def route_devices(mx: MeshShardedIndex, queries: jax.Array) -> jax.Array:
     """Owning device id per query — same searchsorted as shard routing."""
@@ -105,8 +109,8 @@ def route_devices(mx: MeshShardedIndex, queries: jax.Array) -> jax.Array:
 
 def build_mesh_index(keys: jax.Array, vals: jax.Array, *, n_devices: int,
                      n_shards: int, capacity: int = 0, levels: int = 16,
-                     foresight: bool = True, seed: int = 0
-                     ) -> MeshShardedIndex:
+                     foresight: bool = True, seed: int = 0,
+                     node_width: int = 1) -> MeshShardedIndex:
     """Partition sorted unique int32 ``keys`` across ``n_devices`` slices.
 
     Each device slice holds ``m = ceil(n / D)`` keys and is built as an
@@ -124,7 +128,7 @@ def build_mesh_index(keys: jax.Array, vals: jax.Array, *, n_devices: int,
     n = keys.shape[0]
     m = max(1, -(-n // D))
     if capacity == 0:
-        capacity = shard_capacity_for(m, n_shards)
+        capacity = shard_capacity_for(m, n_shards, node_width)
     keys = keys.astype(jnp.int32)
     vals = vals.astype(jnp.int32)
     valid = jnp.ones((n,), jnp.bool_)
@@ -140,7 +144,7 @@ def build_mesh_index(keys: jax.Array, vals: jax.Array, *, n_devices: int,
             keys[d * m:(d + 1) * m], vals[d * m:(d + 1) * m],
             n_shards=n_shards, capacity=capacity, levels=levels,
             foresight=foresight, seed=seed + d * n_shards,
-            valid=valid[d * m:(d + 1) * m]))
+            valid=valid[d * m:(d + 1) * m], node_width=node_width))
     local = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
     return MeshShardedIndex(local=local,
                             device_boundaries=partition_boundaries(keys, m))
@@ -148,7 +152,8 @@ def build_mesh_index(keys: jax.Array, vals: jax.Array, *, n_devices: int,
 
 def empty_mesh_index(*, n_devices: int, n_shards: int, capacity: int,
                      levels: int = 16, foresight: bool = True, seed: int = 0,
-                     key_span: int = int(KEY_MAX)) -> MeshShardedIndex:
+                     key_span: int = int(KEY_MAX),
+                     node_width: int = 1) -> MeshShardedIndex:
     """An empty mesh index with ``[0, key_span)`` split evenly per device.
 
     Unlike ``build_mesh_index`` (boundaries from observed keys) the empty
@@ -163,7 +168,7 @@ def empty_mesh_index(*, n_devices: int, n_shards: int, capacity: int,
     z = jnp.zeros((0,), jnp.int32)
     states = [build_sharded(z, z, n_shards=n_shards, capacity=capacity,
                             levels=levels, foresight=foresight,
-                            seed=seed + d * n_shards)
+                            seed=seed + d * n_shards, node_width=node_width)
               for d in range(D)]
     local = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
     step = max(1, key_span // D)

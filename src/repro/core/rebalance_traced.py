@@ -45,7 +45,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.skiplist import (KEY_MAX, NULL_VAL, OP_INSERT, build, empty,
-                                 sorted_live_kv)
+                                 sorted_live_kv, usable_capacity)
 from repro.core.sharded import (HIGH_WATER, LOW_WATER, RebalanceStats,
                                 ShardedSkipList, route, search_sharded,
                                 validate_watermarks)
@@ -101,9 +101,11 @@ def live_shard_count(shl: ShardedSkipList) -> jax.Array:
     return jnp.sum(shl.boundaries < KEY_MAX).astype(jnp.int32)
 
 
-def _dead_shard(capacity: int, levels: int, foresight: bool):
+def _dead_shard(capacity: int, levels: int, foresight: bool,
+                node_width: int = 1):
     """One dead slot: sentinels only, never routed to (KEY_MAX boundary)."""
-    return empty(capacity, levels, foresight=foresight, seed=0)
+    return empty(capacity, levels, foresight=foresight, seed=0,
+                 node_width=node_width)
 
 
 def pad_shards(shl: ShardedSkipList, max_shards: int) -> ShardedSkipList:
@@ -121,7 +123,8 @@ def pad_shards(shl: ShardedSkipList, max_shards: int) -> ShardedSkipList:
                          "use repack(shl, n_shards=...) to shrink first")
     if M == S:
         return shl
-    dead = _dead_shard(shl.shard_capacity, shl.levels, shl.foresight)
+    dead = _dead_shard(shl.shard_capacity, shl.levels, shl.foresight,
+                       shl.node_width)
     new_shards = jax.tree.map(
         lambda full, d: jnp.concatenate(
             [full, jnp.broadcast_to(d[None], (M - S,) + d.shape)], axis=0),
@@ -155,13 +158,18 @@ def split_shard_traced(shl: ShardedSkipList, s, at_key, *, seed=0
     shard = jax.tree.map(lambda a: a[s], shl.shards)
     ks, vs = sorted_live_kv(shard)
     n = shard.n
+    nw = shl.node_width
     n_left = jnp.sum(ks < at_key).astype(jnp.int32)   # padding is KEY_MAX
-    idx = jnp.arange(cap - 2)
-    left = build(ks, vs, capacity=cap, levels=L, foresight=fs, seed=seed,
-                 valid=idx < n_left)
-    right = build(jnp.roll(ks, -n_left), jnp.roll(vs, -n_left), capacity=cap,
-                  levels=L, foresight=fs, seed=seed + 1,
-                  valid=idx < n - n_left)
+    # rebuilds repack at build fill; near-median cuts keep both halves
+    # within the fill mass even on a run-saturated fat shard (driver
+    # precondition — n_left and n - n_left must fit W)
+    W = usable_capacity(cap, nw)
+    idx = jnp.arange(W)
+    left = build(ks[:W], vs[:W], capacity=cap, levels=L, foresight=fs,
+                 seed=seed, valid=idx < n_left, node_width=nw)
+    right = build(jnp.roll(ks, -n_left)[:W], jnp.roll(vs, -n_left)[:W],
+                  capacity=cap, levels=L, foresight=fs, seed=seed + 1,
+                  valid=idx < n - n_left, node_width=nw)
     i = jnp.arange(S, dtype=jnp.int32)
     src = jnp.where(i <= s, i, i - 1)                  # shift-right from s+1
 
@@ -193,17 +201,21 @@ def merge_shards_traced(shl: ShardedSkipList, s, *, seed=0
     ka, va = sorted_live_kv(a)
     kb, vb = sorted_live_kv(b)
     na, nb = a.n, b.n
+    nw = shl.node_width
     # adjacent disjoint sorted runs concatenate sorted: positions < na from
-    # a, < na + nb from b (shifted), the rest padding
-    i = jnp.arange(cap - 2)
-    j = jnp.clip(i - na, 0, cap - 3)
-    ks = jnp.where(i < na, ka,
+    # a, < na + nb from b (shifted), the rest padding; width is the build-
+    # fill mass the rebuild repacks into (combined count fits it — driver
+    # precondition, watermarked against usable_capacity)
+    width = usable_capacity(cap, nw)
+    i = jnp.arange(width)
+    j = jnp.clip(i - na, 0, width - 1)
+    ks = jnp.where(i < na, ka[:width],
                    jnp.where(i < na + nb, jnp.take(kb, j), KEY_MAX))
-    vs = jnp.where(i < na, va,
+    vs = jnp.where(i < na, va[:width],
                    jnp.where(i < na + nb, jnp.take(vb, j), NULL_VAL))
     merged = build(ks, vs, capacity=cap, levels=L, foresight=fs, seed=seed,
-                   valid=i < na + nb)
-    dead = _dead_shard(cap, L, fs)
+                   valid=i < na + nb, node_width=nw)
+    dead = _dead_shard(cap, L, fs, nw)
     i = jnp.arange(S, dtype=jnp.int32)
     src = jnp.where(i <= s, i, jnp.minimum(i + 1, S - 1))  # shift-left
 
@@ -245,7 +257,7 @@ def watermark_rebalance_traced(shl: ShardedSkipList, *,
     """
     validate_watermarks(high_water, low_water)
     S = shl.n_shards
-    usable = shl.shard_capacity - 2
+    usable = usable_capacity(shl.shard_capacity, shl.node_width)
     ceil_ = _ceiling(shl, max_shards)
     hi_mark = high_water * usable
     lo_mark = low_water * usable
@@ -305,7 +317,7 @@ def exhaustion_guard_traced(shl: ShardedSkipList, op_types: jax.Array,
     signalled-failure contract applies to the following apply).
     """
     S = shl.n_shards
-    usable = shl.shard_capacity - 2
+    usable = usable_capacity(shl.shard_capacity, shl.node_width)
     ceil_ = _ceiling(shl, max_shards)
     B = keys.shape[0]
     if B == 0:
@@ -350,7 +362,7 @@ def exhaustion_guard_traced(shl: ShardedSkipList, op_types: jax.Array,
             s = jnp.argmax(jnp.where(proj > usable, proj, -1)
                            ).astype(jnp.int32)
             shard = jax.tree.map(lambda a: a[s], s2.shards)
-            live_keys, _ = sorted_live_kv(shard)        # [cap-2], KEY_MAX pad
+            live_keys, _ = sorted_live_kv(shard)        # elements, KEY_MAX pad
             incoming = jnp.where(new_mask & (sid == s), k_sorted, KEY_MAX)
             combined = jnp.sort(jnp.concatenate([live_keys, incoming]))
             m = shard.n + jnp.take(add, s)              # combined live count

@@ -96,7 +96,8 @@ from repro.core.skiplist import (HEAD, KEY_MAX, KEY_MIN, NULL_VAL,
                                  OP_INSERT, OP_READ, SkipListState,
                                  apply_ops, build,
                                  check_foresight_invariant,
-                                 effective_top_level, sorted_live_kv)
+                                 effective_top_level, node_slots_for,
+                                 sorted_live_kv, usable_capacity)
 
 
 class ShardedSkipList(NamedTuple):
@@ -122,6 +123,10 @@ class ShardedSkipList(NamedTuple):
     def foresight(self) -> bool:
         return self.shards.fused is not None
 
+    @property
+    def node_width(self) -> int:
+        return self.shards.node_width
+
 
 def route(boundaries: jax.Array, queries: jax.Array) -> jax.Array:
     """Shard id per query: the shard whose key range contains it."""
@@ -130,9 +135,19 @@ def route(boundaries: jax.Array, queries: jax.Array) -> jax.Array:
     return jnp.clip(sid, 0, boundaries.shape[0] - 1).astype(jnp.int32)
 
 
-def shard_capacity_for(n: int, n_shards: int) -> int:
-    """Per-shard capacity for ``n`` total keys (2x headroom, pow2, +sentinels)."""
+def shard_capacity_for(n: int, n_shards: int, node_width: int = 1) -> int:
+    """Per-shard capacity for ``n`` total keys (2x headroom, pow2, +sentinels).
+
+    Under a fat layout, capacity counts NODE slots: ``m`` keys pack into
+    ``node_slots_for(m, node_width)`` half-full runs (the per-node slack
+    that replaces the scalar layout's tail headroom), so the same element
+    count needs a ``~node_width/2``-fold smaller table.
+    """
     m = max(1, -(-n // n_shards))
+    if node_width > 1:
+        # node slots, with the same deliberate 2x headroom: skewed inserts
+        # split full runs, and each split spends one free node slot
+        m = node_slots_for(m, node_width)
     return max(8, 1 << (2 * m + 4 - 1).bit_length())
 
 
@@ -154,25 +169,32 @@ def partition_boundaries(sorted_keys: jax.Array, stride: int) -> jax.Array:
 
 
 @functools.partial(jax.jit, static_argnames=("n_shards", "capacity", "levels",
-                                             "foresight"))
+                                             "foresight", "node_width"))
 def build_sharded(keys: jax.Array, vals: jax.Array, *, n_shards: int,
                   capacity: int = 0, levels: int = 16, foresight: bool = True,
-                  seed: int = 0, valid: Optional[jax.Array] = None
-                  ) -> ShardedSkipList:
+                  seed: int = 0, valid: Optional[jax.Array] = None,
+                  node_width: int = 1) -> ShardedSkipList:
     """Partition sorted unique int32 ``keys`` into ``n_shards`` range shards.
 
     ``valid`` (optional prefix mask) supports callers with a dynamic live
     count (see ``kernels.ops.shard_state``); invalid positions must be a
-    suffix and are forced to ``KEY_MAX`` padding.
+    suffix and are forced to ``KEY_MAX`` padding.  ``node_width`` > 1
+    builds every shard in the fat-node layout (``capacity`` then counts
+    per-shard NODE slots, see ``core.skiplist``).
     """
     n = keys.shape[0]
     S = n_shards
     if capacity == 0:
-        capacity = shard_capacity_for(n, S)
+        capacity = shard_capacity_for(n, S, node_width)
     # keys per shard (ceil); >= 1 so an empty build still pads every shard
     # to one invalid slot and the stride-m boundary slice stays well formed
     m = max(1, -(-n // S))
-    assert m + 2 <= capacity, "shard capacity must exceed keys-per-shard + 2"
+    if node_width > 1:
+        assert node_slots_for(m, node_width) + 2 <= capacity, \
+            "shard capacity must hold keys-per-shard packed into runs"
+    else:
+        assert m + 2 <= capacity, \
+            "shard capacity must exceed keys-per-shard + 2"
 
     keys = keys.astype(jnp.int32)
     vals = vals.astype(jnp.int32)
@@ -191,7 +213,8 @@ def build_sharded(keys: jax.Array, vals: jax.Array, *, n_shards: int,
         sv = vals[s * m:(s + 1) * m]
         sm = valid[s * m:(s + 1) * m]
         states.append(build(sk, sv, capacity=capacity, levels=levels,
-                            foresight=foresight, seed=seed + s, valid=sm))
+                            foresight=foresight, seed=seed + s, valid=sm,
+                            node_width=node_width))
     stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
 
     # first key of each shard; shard 0 owns (-inf, b1)
@@ -200,7 +223,8 @@ def build_sharded(keys: jax.Array, vals: jax.Array, *, n_shards: int,
 
 
 def empty_sharded(*, n_shards: int, capacity: int, levels: int = 16,
-                  foresight: bool = True, seed: int = 0) -> ShardedSkipList:
+                  foresight: bool = True, seed: int = 0,
+                  node_width: int = 1) -> ShardedSkipList:
     """An empty partitioned index (each shard holds only the sentinels).
 
     All but shard 0's boundary degenerate to ``KEY_MAX``, so every insert
@@ -214,7 +238,8 @@ def empty_sharded(*, n_shards: int, capacity: int, levels: int = 16,
     """
     z = jnp.zeros((0,), jnp.int32)
     return build_sharded(z, z, n_shards=n_shards, capacity=capacity,
-                         levels=levels, foresight=foresight, seed=seed)
+                         levels=levels, foresight=foresight, seed=seed,
+                         node_width=node_width)
 
 
 # ---------------------------------------------------------------------------
@@ -266,6 +291,22 @@ def search_sharded(shl: ShardedSkipList, queries: jax.Array
 
     x, lvl = lax.while_loop(cond, body, (x, lvl))
     cand, ck = gather(jnp.zeros((B,), jnp.int32), x)
+    nw = shl.node_width
+    if nw > 1:
+        # fat postlude: one tile gather over the owning run + lane compare
+        # (the host-side twin of the kernels' _fat_resolve)
+        owner = jnp.where((ck == q) | (x == HEAD), cand, x)
+        base = (sid * cap + owner) * nw
+        run = jnp.take(shl.shards.fat_keys.reshape(-1),
+                       base[:, None] + jnp.arange(nw)[None, :], axis=0)
+        pos = jnp.sum((run < q[:, None]).astype(jnp.int32), axis=1)
+        pos_c = jnp.minimum(pos, nw - 1)
+        hit = jnp.take_along_axis(run, pos_c[:, None], axis=1)[:, 0]
+        found = (pos < nw) & (hit == q)
+        vals = jnp.where(found,
+                         jnp.take(shl.shards.fat_vals.reshape(-1),
+                                  base + pos_c), NULL_VAL)
+        return found, vals
     found = ck == q
     flat_vals = shl.shards.vals.reshape(-1)
     vals = jnp.where(found, jnp.take(flat_vals, sid * cap + cand), NULL_VAL)
@@ -299,6 +340,8 @@ def range_scan_sharded(shl: ShardedSkipList, lo: jax.Array, hi: jax.Array,
     s0 = route(shl.boundaries, lo[None])[0]
     shard0 = jax.tree.map(lambda a: a[s0], shl.shards)
     x = sl.search(shard0, lo[None]).preds[0, 0]   # level-0 predecessor of lo
+    if shl.node_width > 1:            # fat: (shard, node, lane) cursor walk
+        return _fat_range_scan_sharded(shl, lo, hi, max_out, s0, x)
 
     if shl.foresight:
         flat = shl.shards.fused.reshape((-1, 2))
@@ -335,6 +378,71 @@ def range_scan_sharded(shl: ShardedSkipList, lo: jax.Array, hi: jax.Array,
     _, _, keys_out, vals_out, count = lax.fori_loop(
         0, max_out + S, body,
         (s0, x, keys_out, vals_out, jnp.int32(0)))
+    return keys_out, vals_out, count
+
+
+def _fat_range_scan_sharded(shl: ShardedSkipList, lo, hi, max_out: int,
+                            s0, x0) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Cross-shard scan over fat runs: a (shard, node, lane) cursor walk.
+
+    The level-0 walk of ``range_scan_sharded`` generalized one axis: the
+    cursor advances lane-by-lane inside the current node's run, hops to the
+    level-0 successor at the run's KEY_MAX padding, and when the successor
+    is the tail (foreseen min == KEY_MAX) *spills* into the next shard's
+    head — shard boundaries stay invisible.  Iteration bound adds one hop
+    per visited node and two steps per empty spilled shard.
+    """
+    S = shl.n_shards
+    L, cap = shl.levels, shl.shard_capacity
+    nw = shl.node_width
+    flat_fk = shl.shards.fat_keys.reshape(-1)
+    flat_fv = shl.shards.fat_vals.reshape(-1)
+    if shl.foresight:
+        flat = shl.shards.fused.reshape((-1, 2))
+        def gather0(sid, xx):
+            rec = flat[(sid * L + 0) * cap + xx]
+            return rec[0], rec[1]
+    else:
+        flat_nxt = shl.shards.nxt.reshape(-1)
+        flat_keys = shl.shards.keys.reshape(-1)
+        def gather0(sid, xx):
+            ptr = flat_nxt[(sid * L + 0) * cap + xx]
+            return ptr, flat_keys[sid * cap + ptr]
+
+    keys_out = jnp.full((max_out,), KEY_MAX, jnp.int32)
+    vals_out = jnp.full((max_out,), NULL_VAL, jnp.int32)
+    bound = 2 * max_out + nw + 2 * S + 4
+
+    def body(_, carry):
+        sid, node, lane, keys_out, vals_out, count, done = carry
+        lane_c = jnp.minimum(lane, nw - 1)
+        flat_at = (sid * cap + node) * nw + lane_c
+        k = flat_fk[flat_at]
+        v = flat_fv[flat_at]
+        ptr, pk = gather0(sid, node)
+        at_end = (k == KEY_MAX) | (lane >= nw)    # run exhausted
+        succ_tail = pk == KEY_MAX                 # level-0 successor is tail
+        spill = at_end & succ_tail & (sid < S - 1) & ~done
+        hop = at_end & ~succ_tail & ~done
+        # last shard's tail, or a LIVE lane at/past hi (padding must hop)
+        stop = (at_end & succ_tail & (sid >= S - 1)) | (~at_end & (k >= hi))
+        take = ~done & ~at_end & (k >= lo) & (k < hi) & (count < max_out)
+        idx = jnp.minimum(count, max_out - 1)
+        keys_out = keys_out.at[idx].set(jnp.where(take, k, keys_out[idx]))
+        vals_out = vals_out.at[idx].set(jnp.where(take, v, vals_out[idx]))
+        count = count + jnp.where(take, 1, 0).astype(jnp.int32)
+        done = done | stop | (count >= max_out)
+        new_sid = jnp.where(spill, sid + 1, sid)
+        new_node = jnp.where(spill, jnp.int32(HEAD),
+                             jnp.where(hop, ptr, node))
+        new_lane = jnp.where(spill | hop, 0,
+                             jnp.where(done, lane, lane + 1))
+        return new_sid, new_node, new_lane, keys_out, vals_out, count, done
+
+    _, _, _, keys_out, vals_out, count, _ = lax.fori_loop(
+        0, bound, body,
+        (s0, x0, jnp.int32(0), keys_out, vals_out, jnp.int32(0),
+         jnp.bool_(False)))
     return keys_out, vals_out, count
 
 
@@ -407,12 +515,20 @@ def split_shard(shl: ShardedSkipList, s: int,
         raise ValueError(f"at_key={at_key} outside shard {s}'s open range "
                          f"({int(b_np[s])}, {hi})")
     n_left = int((ks_np[:n] < at_key).sum())
-    idx = jnp.arange(cap - 2)
-    left = build(ks, vs, capacity=cap, levels=L, foresight=fs, seed=seed,
-                 valid=idx < n_left)
-    right = build(jnp.roll(ks, -n_left), jnp.roll(vs, -n_left), capacity=cap,
-                  levels=L, foresight=fs, seed=seed + 1,
-                  valid=idx < n - n_left)
+    nw = shl.node_width
+    # rebuilds repack at build fill, so each half must fit the fill mass
+    # (a run-saturated fat shard can exceed it — only near-median cuts
+    # are guaranteed feasible there)
+    W = usable_capacity(cap, nw)
+    if n_left > W or n - n_left > W:
+        raise ValueError(f"split halves {n_left}/{n - n_left} exceed the "
+                         f"build-fill capacity {W} (node_width={nw})")
+    idx = jnp.arange(W)
+    left = build(ks[:W], vs[:W], capacity=cap, levels=L, foresight=fs,
+                 seed=seed, valid=idx < n_left, node_width=nw)
+    right = build(jnp.roll(ks, -n_left)[:W], jnp.roll(vs, -n_left)[:W],
+                  capacity=cap, levels=L, foresight=fs, seed=seed + 1,
+                  valid=idx < n - n_left, node_width=nw)
     pair = jax.tree.map(lambda a, b: jnp.stack([a, b]), left, right)
     boundaries = jnp.concatenate([shl.boundaries[:s + 1],
                                   jnp.asarray([at_key], jnp.int32),
@@ -440,16 +556,18 @@ def merge_shards(shl: ShardedSkipList, s: int, *, seed: int = 0
     ka, va = _shard_sorted_kv(a)
     kb, vb = _shard_sorted_kv(b)
     na, nb = int(a.n), int(b.n)
-    if na + nb + 2 > cap:
+    nw = shl.node_width
+    if node_slots_for(na + nb, nw) + 2 > cap:
         raise ValueError(f"merged occupancy {na}+{nb} exceeds shard "
-                         f"capacity {cap} - 2")
-    pad = cap - 2 - na - nb
+                         f"capacity {cap} (node_width={nw})")
+    width = usable_capacity(cap, nw)  # rebuild repacks at build fill
+    pad = width - na - nb
     ks = jnp.concatenate([ka[:na], kb[:nb],
                           jnp.full((pad,), KEY_MAX, jnp.int32)])
     vs = jnp.concatenate([va[:na], vb[:nb],
                           jnp.full((pad,), NULL_VAL, jnp.int32)])
     merged = build(ks, vs, capacity=cap, levels=L, foresight=fs, seed=seed,
-                   valid=jnp.arange(cap - 2) < na + nb)
+                   valid=jnp.arange(width) < na + nb, node_width=nw)
     one = jax.tree.map(lambda x: x[None], merged)
     boundaries = jnp.concatenate([shl.boundaries[:s + 1],
                                   shl.boundaries[s + 2:]])
@@ -472,15 +590,23 @@ def repack(shl: ShardedSkipList, n_shards: int = 0, *, seed: int = 0
     S = shl.n_shards
     S2 = int(n_shards) or S
     cap, L, fs = shl.shard_capacity, shl.levels, shl.foresight
+    nw = shl.node_width
     nn = int(total_n(shl))
-    if -(-max(1, nn) // S2) + 2 > cap:
+    if node_slots_for(-(-max(1, nn) // S2), nw) + 2 > cap:
         raise ValueError(f"{nn} keys over {S2} shards exceed per-shard "
-                         f"capacity {cap}")
-    order = jnp.argsort(shl.shards.keys.reshape(-1))
-    ks = shl.shards.keys.reshape(-1)[order][S:S + nn]
-    vs = shl.shards.vals.reshape(-1)[order][S:S + nn]
+                         f"capacity {cap} (node_width={nw})")
+    if nw > 1:
+        # fat lanes sort directly: sentinel rows are all KEY_MAX (no
+        # KEY_MIN head lane exists), so live elements lead the order
+        order = jnp.argsort(shl.shards.fat_keys.reshape(-1))
+        ks = shl.shards.fat_keys.reshape(-1)[order][:nn]
+        vs = shl.shards.fat_vals.reshape(-1)[order][:nn]
+    else:
+        order = jnp.argsort(shl.shards.keys.reshape(-1))
+        ks = shl.shards.keys.reshape(-1)[order][S:S + nn]
+        vs = shl.shards.vals.reshape(-1)[order][S:S + nn]
     return build_sharded(ks, vs, n_shards=S2, capacity=cap, levels=L,
-                         foresight=fs, seed=seed)
+                         foresight=fs, seed=seed, node_width=nw)
 
 
 def validate_watermarks(high_water: float, low_water: float) -> None:
@@ -518,7 +644,7 @@ def _watermark_rebalance(shl: ShardedSkipList, *, high_water: float,
     the termination argument (``high_water > 0.5`` keeps split halves
     below the high mark; merges only form shards below it)."""
     validate_watermarks(high_water, low_water)
-    usable = shl.shard_capacity - 2
+    usable = usable_capacity(shl.shard_capacity, shl.node_width)
     splits = merges = 0
     while shl.n_shards < max_shards:
         ns = np.asarray(shl.shards.n)
@@ -590,7 +716,7 @@ def _exhaustion_guard(shl: ShardedSkipList, op_types: jax.Array,
     Contents never change, so linearization of the following apply is
     untouched.
     """
-    usable = shl.shard_capacity - 2
+    usable = usable_capacity(shl.shard_capacity, shl.node_width)
     ins = np.asarray(op_types) == OP_INSERT
     if not ins.any():
         return shl, 0

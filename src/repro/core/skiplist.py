@@ -19,6 +19,32 @@ This is the paper's core contribution adapted to TPU (see DESIGN.md §2):
 Node 0 is the head sentinel (key = KEY_MIN) and node 1 the tail sentinel
 (key = KEY_MAX), so every ``next`` pointer is always valid and the traversal
 loop is branch-free.  Keys are int32 in the open interval (KEY_MIN, KEY_MAX).
+
+Fat-node layout (``node_width`` > 1)
+------------------------------------
+
+The scalar layout above resolves ONE key per dependent gather.  The
+fat-node layout (B-Skiplist style; see ISSUE 10 / PAPERS.md) packs each
+node with a contiguous sorted *run* of up to ``node_width`` (= B, naturally
+128 on TPU — the VPU lane width) keys stored lane-major:
+
+* ``fat_keys [cap, B]`` / ``fat_vals [cap, B]`` — per-node runs, ascending,
+  padded with ``KEY_MAX`` / ``NULL_VAL`` past ``nlen[node]`` live lanes;
+* ``keys[node]`` holds the run's exact MINIMUM (the routing key) and the
+  skip structure (``fused`` / ``nxt``) is built over *nodes*, unchanged in
+  shape — so the whole traversal loop is layout-agnostic and one fused
+  gather now services a ``B``-wide tile of comparisons;
+* the final within-node position is a single ``searchsorted``-style lane
+  compare over a VMEM-resident ``[B]`` tile — not a dependent gather;
+* builds pack runs at ``pack_fill(B) = B // 2`` so every node carries
+  per-node insert slack (the fat analogue of the scalar tail padding);
+  a full node splits at its median (``_fat_insert`` case 2), an emptied
+  node splices out and returns to the freelist (``_fat_delete``).
+
+``n`` counts live ELEMENTS; ``bump`` / ``free_list`` allocate NODE slots.
+``capacity`` keeps its meaning of node-slot count everywhere, so the
+scalar engine is exactly ``node_width=1`` (``fat_keys is None``) and the
+two layouts are differentially testable against each other.
 """
 from __future__ import annotations
 
@@ -53,6 +79,9 @@ class SkipListState(NamedTuple):
     free_list: jax.Array     # [cap] int32 — stack of recycled node ids
     bump: jax.Array          # [] int32 — next never-used slot (bump allocator)
     rng: jax.Array           # [2] uint32 — jax PRNG key for tower heights
+    fat_keys: Optional[jax.Array] = None  # [cap, B] int32 — fat layout only
+    fat_vals: Optional[jax.Array] = None  # [cap, B] int32 — fat layout only
+    nlen: Optional[jax.Array] = None      # [cap] int32 — live lanes per run
 
     @property
     def levels(self) -> int:
@@ -67,13 +96,44 @@ class SkipListState(NamedTuple):
     def foresight(self) -> bool:
         return self.fused is not None
 
+    @property
+    def node_width(self) -> int:
+        # shape[-1] so the property also answers on stacked (sharded) states
+        return self.fat_keys.shape[-1] if self.fat_keys is not None else 1
+
 
 # ---------------------------------------------------------------------------
 # Construction
 # ---------------------------------------------------------------------------
 
+def pack_fill(node_width: int) -> int:
+    """Elements packed per node at build time (fat layout): half-full runs
+    leave per-node insert slack — the fat analogue of tail padding."""
+    return max(1, node_width // 2)
+
+
+def node_slots_for(n_elems: int, node_width: int) -> int:
+    """Node slots needed to pack ``n_elems`` elements at build fill.
+
+    ``n_elems`` must be a static python int — every capacity decision is
+    shape arithmetic, never a traced value.
+    """
+    return max(1, -(-n_elems // pack_fill(node_width)))
+
+
+def usable_capacity(capacity: int, node_width: int = 1) -> int:
+    """Conservative insertable-element budget at ``capacity`` node slots.
+
+    Scalar: ``capacity - 2`` (every non-sentinel slot holds one element).
+    Fat: ``(capacity - 2) * pack_fill(node_width)`` — the build-fill mass;
+    runs can individually grow to ``node_width`` but watermarking against
+    the fill keeps split headroom ahead of node-slot exhaustion.
+    """
+    return (capacity - 2) * pack_fill(node_width)
+
+
 def empty(capacity: int, levels: int = 20, *, foresight: bool = True,
-          seed: int = 0) -> SkipListState:
+          seed: int = 0, node_width: int = 1) -> SkipListState:
     """An empty skiplist with room for ``capacity - 2`` elements."""
     keys = jnp.full((capacity,), KEY_MAX, jnp.int32)
     keys = keys.at[HEAD].set(KEY_MIN)
@@ -91,11 +151,17 @@ def empty(capacity: int, levels: int = 20, *, foresight: bool = True,
         nxt = jnp.zeros((levels, capacity), jnp.int32)
         nxt = nxt.at[:, HEAD].set(TAIL)
         nxt = nxt.at[:, TAIL].set(TAIL)
+    fat_keys = fat_vals = nlen = None
+    if node_width > 1:
+        fat_keys = jnp.full((capacity, node_width), KEY_MAX, jnp.int32)
+        fat_vals = jnp.full((capacity, node_width), NULL_VAL, jnp.int32)
+        nlen = jnp.zeros((capacity,), jnp.int32)
     return SkipListState(
         keys=keys, vals=vals, height=height, nxt=nxt, fused=fused,
         n=jnp.int32(0), free_top=jnp.int32(0),
         free_list=jnp.zeros((capacity,), jnp.int32), bump=jnp.int32(2),
         rng=jax.random.PRNGKey(seed),
+        fat_keys=fat_keys, fat_vals=fat_vals, nlen=nlen,
     )
 
 
@@ -118,10 +184,12 @@ def _count_trailing_zeros(x: jax.Array) -> jax.Array:
     return jnp.where(x == 0, jnp.int32(32), ctz)
 
 
-@functools.partial(jax.jit, static_argnames=("capacity", "levels", "foresight"))
+@functools.partial(jax.jit, static_argnames=("capacity", "levels", "foresight",
+                                             "node_width"))
 def build(keys: jax.Array, vals: jax.Array, *, capacity: int,
           levels: int = 20, foresight: bool = True,
-          seed: int = 0, valid: Optional[jax.Array] = None) -> SkipListState:
+          seed: int = 0, valid: Optional[jax.Array] = None,
+          node_width: int = 1) -> SkipListState:
     """Bulk-build from sorted, unique int32 keys (vectorized; no python loop).
 
     Elements get node ids ``2 .. n+1`` in key order.  For every level ``l``,
@@ -133,7 +201,24 @@ def build(keys: jax.Array, vals: jax.Array, *, capacity: int,
     form a suffix and are built as height-0, never-linked padding.  This lets
     a caller with a dynamic element count (e.g. the sharded builder, which
     pads every shard to a common static length) reuse the static-shape build.
+
+    ``node_width`` > 1 selects the fat-node layout: elements are packed into
+    runs of ``pack_fill(node_width)`` keys per node and the skip structure is
+    built over the node minima (see module docstring).  ``capacity`` still
+    counts NODE slots, so a fat build needs only
+    ``node_slots_for(n, node_width) + 2`` of them.
     """
+    if node_width > 1:
+        return _build_fat(keys, vals, capacity=capacity, levels=levels,
+                          foresight=foresight, seed=seed, valid=valid,
+                          node_width=node_width)
+    return _build_scalar(keys, vals, capacity=capacity, levels=levels,
+                         foresight=foresight, seed=seed, valid=valid)
+
+
+def _build_scalar(keys: jax.Array, vals: jax.Array, *, capacity: int,
+                  levels: int, foresight: bool, seed: int,
+                  valid: Optional[jax.Array]) -> SkipListState:
     n = keys.shape[0]
     assert n + 2 <= capacity, "capacity must exceed n + 2 sentinels"
     st = empty(capacity, levels, foresight=foresight, seed=seed)
@@ -198,6 +283,56 @@ def build(keys: jax.Array, vals: jax.Array, *, capacity: int,
                        bump=n_live + jnp.int32(2), rng=rng)
 
 
+def _build_fat(keys: jax.Array, vals: jax.Array, *, capacity: int,
+               levels: int, foresight: bool, seed: int,
+               valid: Optional[jax.Array], node_width: int) -> SkipListState:
+    """Fat-layout build: pack runs at ``pack_fill`` then node-level build.
+
+    The element stream reshapes into ``[n_nodes, fill]`` runs (lane-padded
+    to ``node_width`` with KEY_MAX) and the scalar builder links the run
+    minima — dead trailing nodes (from a ``valid`` prefix shorter than the
+    static input) come out as height-0 KEY_MAX padding exactly like scalar
+    padding slots, so the node-slot bump allocator reuses them for splits.
+    """
+    Bw = node_width
+    fill = pack_fill(Bw)
+    n_in = keys.shape[0]
+    if valid is None:
+        valid = jnp.ones((n_in,), jnp.bool_)
+    keys = jnp.where(valid, keys.astype(jnp.int32), KEY_MAX)
+    vals = jnp.where(valid, vals.astype(jnp.int32), NULL_VAL)
+    n_nodes = -(-n_in // fill) if n_in else 0
+    assert n_nodes + 2 <= capacity, \
+        "capacity (node slots) must exceed packed node count + 2 sentinels"
+    pad = n_nodes * fill - n_in
+    kp = jnp.concatenate([keys, jnp.full((pad,), KEY_MAX, jnp.int32)])
+    vp = jnp.concatenate([vals, jnp.full((pad,), NULL_VAL, jnp.int32)])
+    vm = jnp.concatenate([valid, jnp.zeros((pad,), jnp.bool_)])
+    runs_k = jnp.concatenate(
+        [kp.reshape(n_nodes, fill),
+         jnp.full((n_nodes, Bw - fill), KEY_MAX, jnp.int32)], axis=1)
+    runs_v = jnp.concatenate(
+        [vp.reshape(n_nodes, fill),
+         jnp.full((n_nodes, Bw - fill), NULL_VAL, jnp.int32)], axis=1)
+    node_valid = vm[::fill]       # valid is a prefix => first-lane validity
+    st = _build_scalar(runs_k[:, 0], jnp.full((n_nodes,), NULL_VAL, jnp.int32),
+                       capacity=capacity, levels=levels, foresight=foresight,
+                       seed=seed, valid=node_valid)
+    fat_keys = jnp.full((capacity, Bw), KEY_MAX, jnp.int32)
+    fat_vals = jnp.full((capacity, Bw), NULL_VAL, jnp.int32)
+    nlen = jnp.zeros((capacity,), jnp.int32)
+    n_live = jnp.sum(valid).astype(jnp.int32)
+    if n_nodes:
+        ids = jnp.arange(2, n_nodes + 2, dtype=jnp.int32)
+        fat_keys = fat_keys.at[ids].set(runs_k)
+        fat_vals = fat_vals.at[ids].set(runs_v)
+        per = jnp.clip(n_live - jnp.arange(n_nodes, dtype=jnp.int32) * fill,
+                       0, fill)
+        nlen = nlen.at[ids].set(per)
+    return st._replace(fat_keys=fat_keys, fat_vals=fat_vals, nlen=nlen,
+                       n=n_live)
+
+
 # ---------------------------------------------------------------------------
 # Gather helpers — the heart of the base-vs-foresight distinction
 # ---------------------------------------------------------------------------
@@ -231,17 +366,14 @@ class SearchResult(NamedTuple):
     gathers: jax.Array   # [] int32 — dependent-gather count (arch. counter)
 
 
-def search(state: SkipListState, queries: jax.Array,
-           *, stop_level: int = 0, count_accesses: bool = False
-           ) -> SearchResult:
-    """Batched search for int32 ``queries`` [B].
+def _search_loop(state: SkipListState, q: jax.Array, stop_level: int):
+    """The level-synchronous traversal loop: (x, preds, steps, gathers).
 
-    Level-synchronous: every query advances right or descends once per
-    lock-step iteration.  Foresight needs ONE dependent gather per iteration;
-    base needs TWO (pointer, then pointee key).  ``preds`` records the last
-    node visited per level — the predecessors array used by updates.
+    Layout-agnostic — under the fat layout ``keys``/``fused`` are node-level
+    (run minima), so ``x`` lands on the level-``stop_level`` predecessor
+    NODE and each counted gather is a tile gather servicing ``node_width``
+    comparisons.
     """
-    q = queries.astype(jnp.int32)
     B = q.shape[0]
     L = state.levels
     x = jnp.zeros((B,), jnp.int32)                # start at head
@@ -277,6 +409,49 @@ def search(state: SkipListState, queries: jax.Array,
 
     x, lvl, preds, steps, gathers = lax.while_loop(
         cond, body, (x, lvl, preds, steps, gathers))
+    return x, preds, steps, gathers
+
+
+def _fat_resolve_batch(state: SkipListState, q: jax.Array, x: jax.Array,
+                       cand: jax.Array, cand_key: jax.Array):
+    """Owner node + within-run position for fat-layout queries [B].
+
+    ``x`` is the level-0 predecessor node, ``cand`` its successor.  The
+    owner of ``q``'s position is ``cand`` when ``q`` matches its min (or
+    when nothing precedes it, i.e. ``x`` is still the head), else ``x``.
+    The lane position is one tile compare over the owner's run — VMEM
+    arithmetic, not a dependent gather.
+    """
+    Bw = state.node_width
+    owner = jnp.where((cand_key == q) | (x == HEAD), cand, x)
+    run = jnp.take(state.fat_keys, owner, axis=0)          # [B, Bw]
+    pos = jnp.sum(run < q[:, None], axis=1).astype(jnp.int32)
+    pos_c = jnp.minimum(pos, Bw - 1)
+    hit = jnp.take_along_axis(run, pos_c[:, None], axis=1)[:, 0]
+    found = (pos < Bw) & (hit == q)
+    return owner, pos, pos_c, found
+
+
+def search(state: SkipListState, queries: jax.Array,
+           *, stop_level: int = 0, count_accesses: bool = False
+           ) -> SearchResult:
+    """Batched search for int32 ``queries`` [B].
+
+    Level-synchronous: every query advances right or descends once per
+    lock-step iteration.  Foresight needs ONE dependent gather per iteration;
+    base needs TWO (pointer, then pointee key).  ``preds`` records the last
+    node visited per level — the predecessors array used by updates.
+
+    Under the fat layout the loop runs over node minima, so ``gathers``
+    counts TILE gathers — one fused record per step, each servicing up to
+    ``node_width`` comparisons — and ``node`` is the flat element slot
+    ``owner * node_width + lane``.  The within-run compare is VMEM-resident
+    and deliberately NOT counted, mirroring the scalar counter's exclusion
+    of the final candidate gather (fig8 comparability across layouts).
+    """
+    q = queries.astype(jnp.int32)
+    B = q.shape[0]
+    x, preds, steps, gathers = _search_loop(state, q, stop_level)
 
     # The candidate is the successor of the level-``stop_level`` predecessor.
     if state.foresight:
@@ -285,6 +460,14 @@ def search(state: SkipListState, queries: jax.Array,
     else:
         cand, cand_key = _gather_base(
             state.nxt, state.keys, jnp.full((B,), stop_level, jnp.int32), x)
+    if state.node_width > 1:
+        owner, pos, pos_c, found = _fat_resolve_batch(state, q, x, cand,
+                                                      cand_key)
+        flat = owner * state.node_width + pos_c
+        vals = jnp.where(found,
+                         jnp.take(state.fat_vals.reshape(-1), flat), NULL_VAL)
+        node = jnp.where(found, flat, TAIL)
+        return SearchResult(found, vals, node, preds, steps, gathers)
     found = cand_key == q
     vals = jnp.where(found, jnp.take(state.vals, cand), NULL_VAL)
     node = jnp.where(found, cand, TAIL)
@@ -346,6 +529,12 @@ def search_fast(state: SkipListState, queries: jax.Array
     else:
         cand, ck = _gather_base(state.nxt, state.keys,
                                 jnp.zeros((B,), jnp.int32), x)
+    if state.node_width > 1:
+        owner, pos, pos_c, found = _fat_resolve_batch(state, q, x, cand, ck)
+        flat = owner * state.node_width + pos_c
+        vals = jnp.where(found,
+                         jnp.take(state.fat_vals.reshape(-1), flat), NULL_VAL)
+        return found, vals
     found = ck == q
     vals = jnp.where(found, jnp.take(state.vals, cand), NULL_VAL)
     return found, vals
@@ -385,7 +574,13 @@ def insert(state: SkipListState, key: jax.Array, val: jax.Array
     successor at level ``l`` changes to the new node, we write the pair
     ``(new_id, key)`` into ``p``'s fused record *together* (the SIMD-store
     analogue), and the new node's fused record inherits ``p``'s old pair.
+
+    Fat layout dispatches to ``_fat_insert`` (lane-shift into the owner run,
+    median split when full) — same signalled-failure contract on node-slot
+    exhaustion.
     """
+    if state.node_width > 1:
+        return _fat_insert(state, key, val)
     key = key.astype(jnp.int32)
     res = search(state, key[None])
     found = res.found[0]
@@ -448,7 +643,12 @@ def delete(state: SkipListState, key: jax.Array
     pair at that level (again pair-at-once).  The slot is pushed on the
     freelist; its key/height stay intact until reuse — the versioned-world
     analogue of epoch-based reclamation (see DESIGN.md §8).
+
+    Fat layout dispatches to ``_fat_delete`` (lane-shift out of the owner
+    run; an emptied node splices out and returns to the freelist).
     """
+    if state.node_width > 1:
+        return _fat_delete(state, key)
     key = key.astype(jnp.int32)
     res = search(state, key[None])
     found = res.found[0]
@@ -481,6 +681,243 @@ def delete(state: SkipListState, key: jax.Array
     n = state.n - jnp.where(found, 1, 0).astype(jnp.int32)
     return state._replace(keys=keys, height=height, nxt=nxt, fused=fused,
                           n=n, free_list=free_list, free_top=free_top), found
+
+
+# ---------------------------------------------------------------------------
+# Fat-layout single-element updates (node_width > 1)
+# ---------------------------------------------------------------------------
+
+def _fat_locate(state: SkipListState, key: jax.Array):
+    """(owner, pos, present, preds, x) for one fat-layout key."""
+    x, preds, _, _ = _search_loop(state, key[None], 0)
+    if state.foresight:
+        cand, ck = _gather_fused(state.fused, jnp.zeros((1,), jnp.int32), x)
+    else:
+        cand, ck = _gather_base(state.nxt, state.keys,
+                                jnp.zeros((1,), jnp.int32), x)
+    owner, pos, _, present = _fat_resolve_batch(state, key[None], x, cand, ck)
+    return owner[0], pos[0], present[0], preds[0], x[0]
+
+
+def _splice_node(state: SkipListState, nid: jax.Array, nkey: jax.Array,
+                 h: jax.Array, preds: jax.Array, do: jax.Array
+                 ) -> SkipListState:
+    """Link node ``nid`` (key ``nkey``, height ``h``) after ``preds`` where
+    ``do`` — the pair-at-once foresight splice from scalar ``insert``."""
+    L = state.levels
+    lvls = jnp.arange(L, dtype=jnp.int32)
+    link = do & (lvls < h)
+    nid_full = jnp.full((L,), nid, jnp.int32)
+    if state.foresight:
+        fused = state.fused
+        old = fused[lvls, preds, :]
+        new_pair = jnp.where(link[:, None], old, fused[lvls, nid_full, :])
+        fused = fused.at[lvls, nid_full, :].set(new_pair)
+        pred_pair = jnp.stack([jnp.where(link, nid, old[:, 0]),
+                               jnp.where(link, nkey, old[:, 1])], axis=-1)
+        fused = fused.at[lvls, preds, :].set(pred_pair)
+        state = state._replace(fused=fused)
+    else:
+        nxt = state.nxt
+        old_ptr = nxt[lvls, preds]
+        new_ptr = jnp.where(link, old_ptr, nxt[lvls, nid_full])
+        nxt = nxt.at[lvls, nid_full].set(new_ptr)
+        nxt = nxt.at[lvls, preds].set(jnp.where(link, nid, old_ptr))
+        state = state._replace(nxt=nxt)
+    keys = state.keys.at[nid].set(jnp.where(do, nkey, state.keys[nid]))
+    height = state.height.at[nid].set(jnp.where(do, h, state.height[nid]))
+    return state._replace(keys=keys, height=height)
+
+
+def _set_node_min(state: SkipListState, owner: jax.Array, new_min: jax.Array,
+                  preds: jax.Array, do: jax.Array) -> SkipListState:
+    """Update ``owner``'s routing min to ``new_min`` where ``do``, fixing
+    every foreseen key in ``preds``' fused records that references it.
+
+    Only called when ``preds`` is the predecessor chain of ``owner``'s
+    (old or new) minimum, so the guard ``old_ptr == owner`` selects exactly
+    the levels whose foreseen key is stale.
+    """
+    keys = state.keys.at[owner].set(
+        jnp.where(do, new_min, state.keys[owner]))
+    if not state.foresight:
+        return state._replace(keys=keys)
+    L = state.levels
+    lvls = jnp.arange(L, dtype=jnp.int32)
+    old = state.fused[lvls, preds, :]
+    fix = do & (old[:, 0] == owner)
+    pair = jnp.stack([old[:, 0], jnp.where(fix, new_min, old[:, 1])], axis=-1)
+    fused = state.fused.at[lvls, preds, :].set(pair)
+    return state._replace(keys=keys, fused=fused)
+
+
+def _fat_insert(state: SkipListState, key: jax.Array, val: jax.Array
+                ) -> Tuple[SkipListState, jax.Array]:
+    """Fat-layout insert: upsert / lane-shift / median split / first node.
+
+    One locate resolves the owner run; ``lax.switch`` picks among
+    (0) value upsert, (1) lane-shift insert into a run with room,
+    (2) full run: allocate a node slot, splice it after the owner at the
+    run median, move the upper half, then insert into the correct half,
+    (3) empty list: allocate the first node.  Allocation failure in (2)/(3)
+    signals via the returned flag, exactly like the scalar path.
+    """
+    key = key.astype(jnp.int32)
+    val = val.astype(jnp.int32)
+    Bw = state.node_width
+    half = Bw // 2
+    owner, pos, present, preds, x = _fat_locate(state, key)
+    pos_c = jnp.minimum(pos, Bw - 1)
+    run_k = state.fat_keys[owner]
+    run_v = state.fat_vals[owner]
+    # New global minimum: only possible with the head as level-0 pred —
+    # when owner == x, run_k[0] = keys[x] < key forces pos >= 1.
+    at_front = (x == HEAD) & ~present
+    rng, sub = jax.random.split(state.rng)
+    h = sample_heights(sub, (), state.levels)
+    state = state._replace(rng=rng)
+    lane = jnp.arange(Bw, dtype=jnp.int32)
+
+    def shift_in(rk, rv, p):
+        src = jnp.clip(lane - 1, 0, Bw - 1)
+        nk = jnp.where(lane > p, rk[src], rk)
+        nk = jnp.where(lane == p, key, nk)
+        nv = jnp.where(lane > p, rv[src], rv)
+        nv = jnp.where(lane == p, val, nv)
+        return nk, nv
+
+    def case_upsert(st):
+        fv = st.fat_vals.at[owner, pos_c].set(val)
+        return st._replace(fat_vals=fv), jnp.bool_(False)
+
+    def case_room(st):
+        nk, nv = shift_in(run_k, run_v, pos)
+        st = st._replace(fat_keys=st.fat_keys.at[owner].set(nk),
+                         fat_vals=st.fat_vals.at[owner].set(nv),
+                         nlen=st.nlen.at[owner].add(1),
+                         n=st.n + jnp.int32(1))
+        return _set_node_min(st, owner, key, preds, at_front), jnp.bool_(True)
+
+    def case_split(st):
+        st2, nid, ok = _alloc(st)
+        new_min = run_k[half]
+        # Splice preds for the median — strictly inside the owner's run, so
+        # the level-0 predecessor is the owner itself; the new node lands
+        # AFTER it, which keeps ``preds`` (head chain) valid for at_front.
+        _x2, preds2, _s2, _g2 = _search_loop(st, new_min[None], 0)
+        st2 = _splice_node(st2, nid, new_min, h, preds2[0], ok)
+        hi_k = jnp.where(lane < Bw - half,
+                         run_k[jnp.minimum(lane + half, Bw - 1)], KEY_MAX)
+        hi_v = jnp.where(lane < Bw - half,
+                         run_v[jnp.minimum(lane + half, Bw - 1)], NULL_VAL)
+        lo_k = jnp.where(lane < half, run_k, KEY_MAX)
+        lo_v = jnp.where(lane < half, run_v, NULL_VAL)
+        into_lo = key < new_min                 # == new_min impossible here
+        lo_ik, lo_iv = shift_in(lo_k, lo_v, pos)
+        hi_ik, hi_iv = shift_in(hi_k, hi_v, pos - half)
+        owner_k = jnp.where(into_lo, lo_ik, lo_k)
+        owner_v = jnp.where(into_lo, lo_iv, lo_v)
+        nid_k = jnp.where(into_lo, hi_k, hi_ik)
+        nid_v = jnp.where(into_lo, hi_v, hi_iv)
+        owner_len = jnp.where(into_lo, half + 1, half).astype(jnp.int32)
+        nid_len = (Bw - half) + jnp.where(into_lo, 0, 1).astype(jnp.int32)
+        fk = st2.fat_keys.at[owner].set(jnp.where(ok, owner_k, run_k))
+        fk = fk.at[nid].set(jnp.where(ok, nid_k, fk[nid]), mode="drop")
+        fv = st2.fat_vals.at[owner].set(jnp.where(ok, owner_v, run_v))
+        fv = fv.at[nid].set(jnp.where(ok, nid_v, fv[nid]), mode="drop")
+        nl = st2.nlen.at[owner].set(
+            jnp.where(ok, owner_len, st2.nlen[owner]))
+        nl = nl.at[nid].set(jnp.where(ok, nid_len, nl[nid]), mode="drop")
+        st2 = st2._replace(fat_keys=fk, fat_vals=fv, nlen=nl,
+                           n=st2.n + jnp.where(ok, 1, 0).astype(jnp.int32))
+        st2 = _set_node_min(st2, owner, key, preds, ok & at_front)
+        st2 = lax.cond(ok, lambda s: s,
+                       lambda s: s._replace(free_top=st.free_top,
+                                            bump=st.bump), st2)
+        return st2, ok
+
+    def case_first(st):
+        st2, nid, ok = _alloc(st)
+        st2 = _splice_node(st2, nid, key, h, preds, ok)   # preds all HEAD
+        ek = jnp.full((Bw,), KEY_MAX, jnp.int32).at[0].set(key)
+        ev = jnp.full((Bw,), NULL_VAL, jnp.int32).at[0].set(val)
+        fk = st2.fat_keys.at[nid].set(
+            jnp.where(ok, ek, st2.fat_keys[nid]), mode="drop")
+        fv = st2.fat_vals.at[nid].set(
+            jnp.where(ok, ev, st2.fat_vals[nid]), mode="drop")
+        nl = st2.nlen.at[nid].set(
+            jnp.where(ok, 1, st2.nlen[nid]), mode="drop")
+        st2 = st2._replace(fat_keys=fk, fat_vals=fv, nlen=nl,
+                           n=st2.n + jnp.where(ok, 1, 0).astype(jnp.int32))
+        st2 = lax.cond(ok, lambda s: s,
+                       lambda s: s._replace(free_top=st.free_top,
+                                            bump=st.bump), st2)
+        return st2, ok
+
+    case = jnp.where(present, 0,
+                     jnp.where(owner == TAIL, 3,
+                               jnp.where(state.nlen[owner] < Bw, 1, 2)))
+    return lax.switch(case, [case_upsert, case_room, case_split, case_first],
+                      state)
+
+
+def _fat_delete(state: SkipListState, key: jax.Array
+                ) -> Tuple[SkipListState, jax.Array]:
+    """Fat-layout delete: lane-shift out; an emptied run splices its node
+    out (scalar splice-out on the node level) and frees the slot."""
+    key = key.astype(jnp.int32)
+    Bw = state.node_width
+    owner, pos, present, preds, _x = _fat_locate(state, key)
+    run_k = state.fat_keys[owner]
+    run_v = state.fat_vals[owner]
+    lane = jnp.arange(Bw, dtype=jnp.int32)
+    src = jnp.minimum(lane + 1, Bw - 1)
+    nk = jnp.where(lane >= pos,
+                   jnp.where(lane == Bw - 1, KEY_MAX, run_k[src]), run_k)
+    nv = jnp.where(lane >= pos,
+                   jnp.where(lane == Bw - 1, NULL_VAL, run_v[src]), run_v)
+    new_len = state.nlen[owner] - 1
+    gone = present & (new_len == 0)
+    keep = present & (new_len > 0)
+    new_min = nk[0]
+    L = state.levels
+    lvls = jnp.arange(L, dtype=jnp.int32)
+    link_out = gone & (lvls < state.height[owner])
+    if state.foresight:
+        fused = state.fused
+        d_pair = fused[lvls, jnp.full((L,), owner), :]
+        old = fused[lvls, preds, :]
+        # pos == 0 deletes the owner's min: ``preds`` is exactly its
+        # predecessor chain (the located key IS keys[owner]), so patch the
+        # foreseen key wherever it references the owner.
+        fix = keep & (pos == 0) & (old[:, 0] == owner)
+        p0 = jnp.where(link_out, d_pair[:, 0], old[:, 0])
+        p1 = jnp.where(link_out, d_pair[:, 1],
+                       jnp.where(fix, new_min, old[:, 1]))
+        fused = fused.at[lvls, preds, :].set(jnp.stack([p0, p1], axis=-1))
+        state = state._replace(fused=fused)
+    else:
+        nxt = state.nxt
+        d_ptr = nxt[lvls, jnp.full((L,), owner)]
+        old = nxt[lvls, preds]
+        nxt = nxt.at[lvls, preds].set(jnp.where(link_out, d_ptr, old))
+        state = state._replace(nxt=nxt)
+    keys = state.keys.at[owner].set(
+        jnp.where(gone, KEY_MAX,
+                  jnp.where(keep & (pos == 0), new_min, state.keys[owner])))
+    height = state.height.at[owner].set(
+        jnp.where(gone, 0, state.height[owner]))
+    fk = state.fat_keys.at[owner].set(jnp.where(present, nk, run_k))
+    fv = state.fat_vals.at[owner].set(jnp.where(present, nv, run_v))
+    nlen = state.nlen.at[owner].set(
+        jnp.where(present, new_len, state.nlen[owner]))
+    free_list = state.free_list.at[state.free_top].set(
+        jnp.where(gone, owner, state.free_list[state.free_top]))
+    free_top = state.free_top + jnp.where(gone, 1, 0).astype(jnp.int32)
+    n = state.n - jnp.where(present, 1, 0).astype(jnp.int32)
+    return state._replace(keys=keys, height=height, fat_keys=fk, fat_vals=fv,
+                          nlen=nlen, n=n, free_list=free_list,
+                          free_top=free_top), present
 
 
 # ---------------------------------------------------------------------------
@@ -540,6 +977,30 @@ def check_foresight_invariant(state: SkipListState) -> jax.Array:
     return jnp.all(ok)
 
 
+def check_fat_invariant(state: SkipListState) -> jax.Array:
+    """Fat-layout structural invariants (on top of the foresight one):
+
+    * a live node's routing key equals its run's first lane (exact min);
+    * runs are strictly ascending over their live lanes;
+    * lanes past ``nlen`` hold KEY_MAX (padding is canonical);
+    * live lane counts sum to ``n``; live nodes are non-empty.
+    """
+    assert state.node_width > 1
+    cap, Bw = state.fat_keys.shape
+    ids = jnp.arange(cap)
+    live = (ids >= 2) & (state.height > 0)
+    lane = jnp.arange(Bw)
+    in_run = lane[None, :] < state.nlen[:, None]
+    fk = state.fat_keys
+    min_ok = jnp.all(jnp.where(live, fk[:, 0] == state.keys, True))
+    sorted_ok = jnp.all(jnp.where(in_run[:, 1:],
+                                  fk[:, 1:] > fk[:, :-1], True))
+    pad_ok = jnp.all(jnp.where(~in_run, fk == KEY_MAX, True))
+    count_ok = jnp.sum(jnp.where(live, state.nlen, 0)) == state.n
+    len_ok = jnp.all(jnp.where(live, state.nlen >= 1, state.nlen == 0))
+    return min_ok & sorted_ok & pad_ok & count_ok & len_ok
+
+
 def sorted_live_kv(state: SkipListState) -> Tuple[jax.Array, jax.Array]:
     """Live (key, val) pairs in key order, padded to ``capacity - 2``.
 
@@ -550,8 +1011,21 @@ def sorted_live_kv(state: SkipListState) -> Tuple[jax.Array, jax.Array]:
     ``state.n`` is padding.  Output shape is static, so the caller can pair
     it with a ``valid`` prefix mask and re-``build`` at the same capacity —
     the in-place relayout move that works identically eager and traced.
+
+    Fat layout: the run-packing primitive.  All ``cap * B`` lanes flat-sort;
+    sentinel and padding lanes hold ``KEY_MAX`` (the head's fat row is
+    KEY_MAX too — no KEY_MIN lane exists), so the live elements are exactly
+    the first ``state.n`` entries and the static output width is
+    ``(cap - 2) * node_width``.  Callers must size against ``ks.shape[0]``,
+    not ``cap - 2``.
     """
     cap = state.capacity
+    if state.node_width > 1:
+        flat_k = state.fat_keys.reshape(-1)
+        flat_v = state.fat_vals.reshape(-1)
+        order = jnp.argsort(flat_k)
+        w = (cap - 2) * state.node_width
+        return flat_k[order][:w], flat_v[order][:w]
     order = jnp.argsort(state.keys)
     return state.keys[order][1:cap - 1], state.vals[order][1:cap - 1]
 
@@ -590,6 +1064,8 @@ def range_scan(state: SkipListState, lo: jax.Array, hi: jax.Array,
     """
     lo = lo.astype(jnp.int32)
     hi = hi.astype(jnp.int32)
+    if state.node_width > 1:
+        return _fat_range_scan(state, lo, hi, max_out)
     r = search(state, lo[None])
     x = r.preds[0, 0]                         # level-0 predecessor of lo
 
@@ -615,4 +1091,55 @@ def range_scan(state: SkipListState, lo: jax.Array, hi: jax.Array,
 
     x, keys_out, vals_out, count = lax.fori_loop(
         0, max_out, body, (x, keys_out, vals_out, jnp.int32(0)))
+    return keys_out, vals_out, count
+
+
+def _fat_range_scan(state: SkipListState, lo: jax.Array, hi: jax.Array,
+                    max_out: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fat-layout range scan: a (node, lane) cursor walk.
+
+    Starts at the level-0 predecessor NODE of ``lo`` (its run may straddle
+    ``lo``), advances lane-by-lane, hops to the next node at the run's
+    KEY_MAX padding, and stops at the tail's self-loop or past ``hi``.
+    Emitted pairs compact from slot 0 (matching the scalar walk's output
+    contract).  Iteration bound: <= node_width skipped lanes in the first
+    node + max_out emissions + one hop per visited node.
+    """
+    Bw = state.node_width
+    x, _preds, _s, _g = _search_loop(state, lo[None], 0)
+    keys_out = jnp.full((max_out,), KEY_MAX, jnp.int32)
+    vals_out = jnp.full((max_out,), NULL_VAL, jnp.int32)
+    bound = 2 * max_out + Bw + 4
+
+    def body(i, carry):
+        node, lane, keys_out, vals_out, count, done = carry
+        lane_c = jnp.minimum(lane, Bw - 1)
+        k = state.fat_keys[node, lane_c]
+        v = state.fat_vals[node, lane_c]
+        if state.foresight:
+            ptr, _ = _gather_fused(state.fused, jnp.zeros((1,), jnp.int32),
+                                   node[None])
+        else:
+            ptr, _ = _gather_base(state.nxt, state.keys,
+                                  jnp.zeros((1,), jnp.int32), node[None])
+        ptr = ptr[0]
+        at_end = (k == KEY_MAX) | (lane >= Bw)
+        hop = at_end & (ptr != node) & ~done
+        # tail self-loop, or a LIVE lane at/past hi (padding must hop)
+        stop = (at_end & (ptr == node)) | (~at_end & (k >= hi))
+        take = ~done & ~at_end & (k >= lo) & (k < hi) & (count < max_out)
+        idx = jnp.minimum(count, max_out - 1)
+        keys_out = keys_out.at[idx].set(jnp.where(take, k, keys_out[idx]))
+        vals_out = vals_out.at[idx].set(jnp.where(take, v, vals_out[idx]))
+        count = count + jnp.where(take, 1, 0).astype(jnp.int32)
+        done = done | stop | (count >= max_out)
+        new_node = jnp.where(hop, ptr, node)
+        new_lane = jnp.where(hop, 0, jnp.where(done, lane, lane + 1))
+        return new_node, new_lane, keys_out, vals_out, count, done
+
+    node0 = x[0]
+    _, _, keys_out, vals_out, count, _ = lax.fori_loop(
+        0, bound, body,
+        (node0, jnp.int32(0), keys_out, vals_out, jnp.int32(0),
+         jnp.bool_(False)))
     return keys_out, vals_out, count

@@ -70,6 +70,24 @@ sid, so the dense grid skips their compute via ``pl.when(any(mine))``
 (the tile copy remains — dense is the reference path) and the clustered
 ``block_sids`` never name them at all (no copy either).
 
+Fat-node layout (``node_width`` > 1): every kernel accepts an optional
+``fat_keys`` tile (``[cap, B]`` per shard, lane-major sorted runs — see
+``core.skiplist``).  The traversal loop is untouched — the skip structure
+is built over *nodes*, so ``fused``/``nxt`` keep their shapes and the
+routing keys are the per-node run minima.  Only the postlude changes:
+instead of reading the level-0 candidate's key, ``_fat_resolve`` issues
+ONE more tile gather (the owning node's whole ``node_width`` run into
+VREGs) and a lane-wide compare — a vectorized ``searchsorted`` over a
+VMEM-resident tile — to land on the element.  One gather therefore
+services ``node_width`` comparisons, and because ``capacity`` counts node
+slots the whole dependent-gather chain (``traversal_bound``) shrinks
+~``node_width/2``-fold for the same element count.
+
+``plan_launch`` is the ONE derivation site for grid geometry and the
+step ceiling — every wrapper (and the degeneration split in ``ops.py``)
+re-derives its launch from the shapes of the state it is handed on THAT
+call, which is the rebalance-safety contract above.
+
 Kernels are validated in ``interpret=True`` mode on CPU (bit-exact against
 ``ref.py``); block shapes keep the minor dimension at 128 lanes and the
 fused pair in the minor-most axis so a real-TPU lowering fetches both halves
@@ -78,12 +96,19 @@ in one transaction.
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+# +inf key sentinel (core.skiplist.KEY_MAX as a python int: pallas kernels
+# reject captured jnp scalars, and a literal folds into the compare)
+_KEY_MAX = 2**31 - 1
+
+QBLK = 128     # query lanes per grid step == VPU lane width
 
 
 # ---------------------------------------------------------------------------
@@ -141,6 +166,37 @@ def traversal_bound(levels: int, capacity: int) -> int:
     return levels + max(2, capacity) - 2 + 16
 
 
+class LaunchPlan(NamedTuple):
+    """Launch geometry shared by every traversal wrapper (and ``ops.py``).
+
+    One derivation site for the grid and the step ceiling so the sharded,
+    clustered and fat-node variants cannot drift; all fields come from the
+    static shapes of the state handed to THIS call (rebalance safety).
+    """
+    grid: Tuple[int, ...]
+    nblk: int
+    max_steps: int
+
+
+def plan_launch(*, levels: int, capacity: int, batch: int,
+                max_steps: int = 0,
+                n_shards: Optional[int] = None) -> LaunchPlan:
+    """Derive grid and traversal ceiling for one kernel launch.
+
+    ``capacity`` counts NODE slots — under a fat layout that is
+    elements/fill, so the derived ``traversal_bound`` (the worst-case
+    dependent-gather chain the compiled kernel budgets) shrinks with the
+    node width even though the formula is unchanged.  ``n_shards`` adds
+    the minor grid axis: the dense shard count S, or the clustered K.
+    """
+    assert batch % QBLK == 0, "pad queries to a multiple of QBLK"
+    nblk = batch // QBLK
+    if max_steps == 0:
+        max_steps = traversal_bound(levels, capacity)
+    grid = (nblk,) if n_shards is None else (nblk, n_shards)
+    return LaunchPlan(grid, nblk, max_steps)
+
+
 def _fused_gather(fused_tile, cap: int):
     """ONE VMEM gather per step: the (ptr, key) record, pair-atomic by layout."""
     flat_ptr = fused_tile[..., 0].reshape(-1)
@@ -164,18 +220,53 @@ def _base_gather(nxt_tile, keys_tile, cap: int):
     return gather
 
 
+def _fat_resolve(gather, fat_keys, q, x, node_width: int):
+    """Fat-node postlude: one tile gather + lane-wide compare land on the
+    element.
+
+    ``x`` is the node-level predecessor; its level-0 successor ``cand`` is
+    the candidate node.  The query lives in ``cand``'s run when the
+    foreseen min-key equals it exactly (runs carry their minimum as the
+    routing key) or when the predecessor is the head sentinel; otherwise
+    it lies inside ``x``'s own run.  ONE gather pulls the owner's whole
+    ``node_width`` run into VREGs; the lane-wide ``<`` count is the
+    searchsorted position.  Returns an ELEMENT-flat node id
+    (``owner * node_width + pos``) and the key at that position
+    (``KEY_MAX`` when the query exceeds the whole run) so the caller's
+    ``key == q`` found-test is layout-independent.
+    """
+    cand, ck = gather(jnp.zeros_like(q), x)
+    owner = jnp.where((ck == q) | (x == 0), cand, x)
+    lane = lax.broadcasted_iota(jnp.int32, (q.shape[0], node_width), 1)
+    run = jnp.take(fat_keys.reshape(-1),
+                   owner[:, None] * node_width + lane, axis=0)
+    pos = jnp.sum((run < q[:, None]).astype(jnp.int32), axis=1)
+    pos_c = jnp.minimum(pos, node_width - 1)
+    hit = jnp.sum(jnp.where(lane == pos_c[:, None], run, 0), axis=1)
+    key = jnp.where(pos < node_width, hit, jnp.int32(_KEY_MAX))
+    return owner * node_width + pos_c, key
+
+
 # ---------------------------------------------------------------------------
 # Foresight kernel: ONE dependent gather per lock-step iteration
 # ---------------------------------------------------------------------------
 
-def _foresight_kernel(q_ref, fused_ref, node_ref, key_ref, *,
-                      levels: int, cap: int, max_steps: int):
+def _foresight_kernel(q_ref, fused_ref, *rest,
+                      levels: int, cap: int, max_steps: int,
+                      node_width: int = 1):
+    if node_width > 1:
+        fatk_ref, node_ref, key_ref = rest
+    else:
+        node_ref, key_ref = rest
     q = q_ref[...]                                   # [QBLK] int32
     gather = _fused_gather(fused_ref[...], cap)      # [L, cap, 2] in VMEM
     x = _traverse_loop(q, jnp.ones_like(q, jnp.bool_), gather,
                        levels=levels, max_steps=max_steps)
-    # Level-0 successor of the final predecessor = the candidate.
-    node, key = gather(jnp.zeros_like(q), x)
+    if node_width > 1:
+        node, key = _fat_resolve(gather, fatk_ref[...], q, x, node_width)
+    else:
+        # Level-0 successor of the final predecessor = the candidate.
+        node, key = gather(jnp.zeros_like(q), x)
     node_ref[...] = node
     key_ref[...] = key
 
@@ -184,13 +275,21 @@ def _foresight_kernel(q_ref, fused_ref, node_ref, key_ref, *,
 # Base kernel: TWO chained gathers per lock-step iteration
 # ---------------------------------------------------------------------------
 
-def _base_kernel(q_ref, nxt_ref, keys_ref, node_ref, key_ref, *,
-                 levels: int, cap: int, max_steps: int):
+def _base_kernel(q_ref, nxt_ref, keys_ref, *rest,
+                 levels: int, cap: int, max_steps: int,
+                 node_width: int = 1):
+    if node_width > 1:
+        fatk_ref, node_ref, key_ref = rest
+    else:
+        node_ref, key_ref = rest
     q = q_ref[...]
     gather = _base_gather(nxt_ref[...], keys_ref[...], cap)
     x = _traverse_loop(q, jnp.ones_like(q, jnp.bool_), gather,
                        levels=levels, max_steps=max_steps)
-    node, key = gather(jnp.zeros_like(q), x)
+    if node_width > 1:
+        node, key = _fat_resolve(gather, fatk_ref[...], q, x, node_width)
+    else:
+        node, key = gather(jnp.zeros_like(q), x)
     node_ref[...] = node
     key_ref[...] = key
 
@@ -199,31 +298,35 @@ def _base_kernel(q_ref, nxt_ref, keys_ref, node_ref, key_ref, *,
 # pallas_call wrappers with explicit BlockSpec VMEM tiling
 # ---------------------------------------------------------------------------
 
-QBLK = 128     # query lanes per grid step == VPU lane width
-
 
 @functools.partial(jax.jit, static_argnames=("max_steps", "interpret"))
-def foresight_traverse(fused: jax.Array, queries: jax.Array, *,
+def foresight_traverse(fused: jax.Array, queries: jax.Array,
+                       fat_keys: Optional[jax.Array] = None, *,
                        max_steps: int = 0, interpret: bool = True):
     """Batched foresight search. Returns (node[B], cand_key[B]).
 
-    ``queries`` length must be a multiple of QBLK (ops.py pads).
+    ``queries`` length must be a multiple of QBLK (ops.py pads).  With
+    ``fat_keys [cap, node_width]`` the node id is ELEMENT-flat
+    (``owner * node_width + pos``, see ``_fat_resolve``).
     """
     L, cap, _ = fused.shape
     B = queries.shape[0]
-    assert B % QBLK == 0, "pad queries to a multiple of QBLK"
-    if max_steps == 0:
-        max_steps = traversal_bound(L, cap)
-    grid = (B // QBLK,)
+    plan = plan_launch(levels=L, capacity=cap, batch=B, max_steps=max_steps)
+    nw = 1 if fat_keys is None else fat_keys.shape[-1]
     kernel = functools.partial(_foresight_kernel, levels=L, cap=cap,
-                               max_steps=max_steps)
+                               max_steps=plan.max_steps, node_width=nw)
+    in_specs = [
+        pl.BlockSpec((QBLK,), lambda i: (i,)),          # queries → VMEM
+        pl.BlockSpec((L, cap, 2), lambda i: (0, 0, 0)),  # fused table → VMEM
+    ]
+    operands = [queries.astype(jnp.int32), fused]
+    if nw > 1:
+        in_specs.append(pl.BlockSpec((cap, nw), lambda i: (0, 0)))
+        operands.append(fat_keys)
     node, key = pl.pallas_call(
         kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((QBLK,), lambda i: (i,)),          # queries → VMEM
-            pl.BlockSpec((L, cap, 2), lambda i: (0, 0, 0)),  # fused table → VMEM
-        ],
+        grid=plan.grid,
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((QBLK,), lambda i: (i,)),
             pl.BlockSpec((QBLK,), lambda i: (i,)),
@@ -233,7 +336,7 @@ def foresight_traverse(fused: jax.Array, queries: jax.Array, *,
             jax.ShapeDtypeStruct((B,), jnp.int32),
         ],
         interpret=interpret,
-    )(queries.astype(jnp.int32), fused)
+    )(*operands)
     return node, key
 
 
@@ -251,8 +354,13 @@ def foresight_traverse(fused: jax.Array, queries: jax.Array, *,
 # precisely the sharded key-space path the module docstring promises.
 # Shard tiles with no routed lanes skip the traversal loop via pl.when.
 
-def _foresight_sharded_kernel(q_ref, sid_ref, fused_ref, node_ref, key_ref, *,
-                              levels: int, cap: int, max_steps: int):
+def _foresight_sharded_kernel(q_ref, sid_ref, fused_ref, *rest,
+                              levels: int, cap: int, max_steps: int,
+                              node_width: int = 1):
+    if node_width > 1:
+        fatk_ref, node_ref, key_ref = rest
+    else:
+        node_ref, key_ref = rest
     s = pl.program_id(1)
     q = q_ref[...]                                   # [QBLK] int32
     mine = sid_ref[...] == s                         # lanes routed to tile s
@@ -267,13 +375,21 @@ def _foresight_sharded_kernel(q_ref, sid_ref, fused_ref, node_ref, key_ref, *,
         gather = _fused_gather(fused_ref[...], cap)  # [1, L, cap, 2] tile
         x = _traverse_loop(q, mine, gather, levels=levels,
                            max_steps=max_steps)
-        node, key = gather(jnp.zeros_like(q), x)
+        if node_width > 1:
+            node, key = _fat_resolve(gather, fatk_ref[...], q, x, node_width)
+        else:
+            node, key = gather(jnp.zeros_like(q), x)
         node_ref[...] = jnp.where(mine, node, node_ref[...])
         key_ref[...] = jnp.where(mine, key, key_ref[...])
 
 
-def _base_sharded_kernel(q_ref, sid_ref, nxt_ref, keys_ref, node_ref,
-                         key_ref, *, levels: int, cap: int, max_steps: int):
+def _base_sharded_kernel(q_ref, sid_ref, nxt_ref, keys_ref, *rest,
+                         levels: int, cap: int, max_steps: int,
+                         node_width: int = 1):
+    if node_width > 1:
+        fatk_ref, node_ref, key_ref = rest
+    else:
+        node_ref, key_ref = rest
     s = pl.program_id(1)
     q = q_ref[...]
     mine = sid_ref[...] == s
@@ -288,37 +404,47 @@ def _base_sharded_kernel(q_ref, sid_ref, nxt_ref, keys_ref, node_ref,
         gather = _base_gather(nxt_ref[...], keys_ref[...], cap)
         x = _traverse_loop(q, mine, gather, levels=levels,
                            max_steps=max_steps)
-        node, key = gather(jnp.zeros_like(q), x)
+        if node_width > 1:
+            node, key = _fat_resolve(gather, fatk_ref[...], q, x, node_width)
+        else:
+            node, key = gather(jnp.zeros_like(q), x)
         node_ref[...] = jnp.where(mine, node, node_ref[...])
         key_ref[...] = jnp.where(mine, key, key_ref[...])
 
 
 @functools.partial(jax.jit, static_argnames=("max_steps", "interpret"))
 def foresight_traverse_sharded(fused: jax.Array, shard_ids: jax.Array,
-                               queries: jax.Array, *, max_steps: int = 0,
-                               interpret: bool = True):
+                               queries: jax.Array,
+                               fat_keys: Optional[jax.Array] = None, *,
+                               max_steps: int = 0, interpret: bool = True):
     """Sharded foresight search over stacked tables ``fused [S, L, cap, 2]``.
 
     ``shard_ids [B]`` routes each (padded) query lane to its key-range shard
     (see ``core.sharded.route``).  Returns (node[B], cand_key[B]) with node
-    ids local to the owning shard.
+    ids local to the owning shard (element-flat under ``fat_keys
+    [S, cap, node_width]``).
     """
     S, L, cap, _ = fused.shape
     B = queries.shape[0]
-    assert B % QBLK == 0, "pad queries to a multiple of QBLK"
-    if max_steps == 0:
-        max_steps = traversal_bound(L, cap)
-    grid = (B // QBLK, S)
+    plan = plan_launch(levels=L, capacity=cap, batch=B,
+                       max_steps=max_steps, n_shards=S)
+    nw = 1 if fat_keys is None else fat_keys.shape[-1]
     kernel = functools.partial(_foresight_sharded_kernel, levels=L, cap=cap,
-                               max_steps=max_steps)
+                               max_steps=plan.max_steps, node_width=nw)
+    in_specs = [
+        pl.BlockSpec((QBLK,), lambda j, s: (j,)),        # queries → VMEM
+        pl.BlockSpec((QBLK,), lambda j, s: (j,)),        # shard ids
+        pl.BlockSpec((1, L, cap, 2), lambda j, s: (s, 0, 0, 0)),  # tile s
+    ]
+    operands = [queries.astype(jnp.int32), shard_ids.astype(jnp.int32),
+                fused]
+    if nw > 1:
+        in_specs.append(pl.BlockSpec((1, cap, nw), lambda j, s: (s, 0, 0)))
+        operands.append(fat_keys)
     node, key = pl.pallas_call(
         kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((QBLK,), lambda j, s: (j,)),        # queries → VMEM
-            pl.BlockSpec((QBLK,), lambda j, s: (j,)),        # shard ids
-            pl.BlockSpec((1, L, cap, 2), lambda j, s: (s, 0, 0, 0)),  # tile s
-        ],
+        grid=plan.grid,
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((QBLK,), lambda j, s: (j,)),
             pl.BlockSpec((QBLK,), lambda j, s: (j,)),
@@ -328,32 +454,38 @@ def foresight_traverse_sharded(fused: jax.Array, shard_ids: jax.Array,
             jax.ShapeDtypeStruct((B,), jnp.int32),
         ],
         interpret=interpret,
-    )(queries.astype(jnp.int32), shard_ids.astype(jnp.int32), fused)
+    )(*operands)
     return node, key
 
 
 @functools.partial(jax.jit, static_argnames=("max_steps", "interpret"))
 def base_traverse_sharded(nxt: jax.Array, keys: jax.Array,
-                          shard_ids: jax.Array, queries: jax.Array, *,
+                          shard_ids: jax.Array, queries: jax.Array,
+                          fat_keys: Optional[jax.Array] = None, *,
                           max_steps: int = 0, interpret: bool = True):
     """Sharded base search over ``nxt [S, L, cap]`` / ``keys [S, cap]``."""
     S, L, cap = nxt.shape
     B = queries.shape[0]
-    assert B % QBLK == 0, "pad queries to a multiple of QBLK"
-    if max_steps == 0:
-        max_steps = traversal_bound(L, cap)
-    grid = (B // QBLK, S)
+    plan = plan_launch(levels=L, capacity=cap, batch=B,
+                       max_steps=max_steps, n_shards=S)
+    nw = 1 if fat_keys is None else fat_keys.shape[-1]
     kernel = functools.partial(_base_sharded_kernel, levels=L, cap=cap,
-                               max_steps=max_steps)
+                               max_steps=plan.max_steps, node_width=nw)
+    in_specs = [
+        pl.BlockSpec((QBLK,), lambda j, s: (j,)),
+        pl.BlockSpec((QBLK,), lambda j, s: (j,)),
+        pl.BlockSpec((1, L, cap), lambda j, s: (s, 0, 0)),
+        pl.BlockSpec((1, cap), lambda j, s: (s, 0)),
+    ]
+    operands = [queries.astype(jnp.int32), shard_ids.astype(jnp.int32),
+                nxt, keys]
+    if nw > 1:
+        in_specs.append(pl.BlockSpec((1, cap, nw), lambda j, s: (s, 0, 0)))
+        operands.append(fat_keys)
     node, key = pl.pallas_call(
         kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((QBLK,), lambda j, s: (j,)),
-            pl.BlockSpec((QBLK,), lambda j, s: (j,)),
-            pl.BlockSpec((1, L, cap), lambda j, s: (s, 0, 0)),
-            pl.BlockSpec((1, cap), lambda j, s: (s, 0)),
-        ],
+        grid=plan.grid,
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((QBLK,), lambda j, s: (j,)),
             pl.BlockSpec((QBLK,), lambda j, s: (j,)),
@@ -363,7 +495,7 @@ def base_traverse_sharded(nxt: jax.Array, keys: jax.Array,
             jax.ShapeDtypeStruct((B,), jnp.int32),
         ],
         interpret=interpret,
-    )(queries.astype(jnp.int32), shard_ids.astype(jnp.int32), nxt, keys)
+    )(*operands)
     return node, key
 
 
@@ -388,8 +520,13 @@ def base_traverse_sharded(nxt: jax.Array, keys: jax.Array,
 # the K minor steps (same revisited-block accumulation as the dense grid).
 
 def _foresight_clustered_kernel(bsids_ref, ndist_ref, q_ref, sid_ref,
-                                fused_ref, node_ref, key_ref, *,
-                                levels: int, cap: int, max_steps: int):
+                                fused_ref, *rest,
+                                levels: int, cap: int, max_steps: int,
+                                node_width: int = 1):
+    if node_width > 1:
+        fatk_ref, node_ref, key_ref = rest
+    else:
+        node_ref, key_ref = rest
     j = pl.program_id(0)
     k = pl.program_id(1)
     q = q_ref[...]                                   # [QBLK] shard-sorted
@@ -405,14 +542,22 @@ def _foresight_clustered_kernel(bsids_ref, ndist_ref, q_ref, sid_ref,
         gather = _fused_gather(fused_ref[...], cap)  # [1, L, cap, 2] tile
         x = _traverse_loop(q, mine, gather, levels=levels,
                            max_steps=max_steps)
-        node, key = gather(jnp.zeros_like(q), x)
+        if node_width > 1:
+            node, key = _fat_resolve(gather, fatk_ref[...], q, x, node_width)
+        else:
+            node, key = gather(jnp.zeros_like(q), x)
         node_ref[...] = jnp.where(mine, node, node_ref[...])
         key_ref[...] = jnp.where(mine, key, key_ref[...])
 
 
 def _base_clustered_kernel(bsids_ref, ndist_ref, q_ref, sid_ref, nxt_ref,
-                           keys_ref, node_ref, key_ref, *,
-                           levels: int, cap: int, max_steps: int):
+                           keys_ref, *rest,
+                           levels: int, cap: int, max_steps: int,
+                           node_width: int = 1):
+    if node_width > 1:
+        fatk_ref, node_ref, key_ref = rest
+    else:
+        node_ref, key_ref = rest
     j = pl.program_id(0)
     k = pl.program_id(1)
     q = q_ref[...]
@@ -428,7 +573,10 @@ def _base_clustered_kernel(bsids_ref, ndist_ref, q_ref, sid_ref, nxt_ref,
         gather = _base_gather(nxt_ref[...], keys_ref[...], cap)
         x = _traverse_loop(q, mine, gather, levels=levels,
                            max_steps=max_steps)
-        node, key = gather(jnp.zeros_like(q), x)
+        if node_width > 1:
+            node, key = _fat_resolve(gather, fatk_ref[...], q, x, node_width)
+        else:
+            node, key = gather(jnp.zeros_like(q), x)
         node_ref[...] = jnp.where(mine, node, node_ref[...])
         key_ref[...] = jnp.where(mine, key, key_ref[...])
 
@@ -436,8 +584,9 @@ def _base_clustered_kernel(bsids_ref, ndist_ref, q_ref, sid_ref, nxt_ref,
 @functools.partial(jax.jit, static_argnames=("max_steps", "interpret"))
 def foresight_traverse_clustered(fused: jax.Array, block_sids: jax.Array,
                                  ndist: jax.Array, shard_ids: jax.Array,
-                                 queries: jax.Array, *, max_steps: int = 0,
-                                 interpret: bool = True):
+                                 queries: jax.Array,
+                                 fat_keys: Optional[jax.Array] = None, *,
+                                 max_steps: int = 0, interpret: bool = True):
     """Clustered foresight search over ``fused [S, L, cap, 2]``.
 
     ``queries``/``shard_ids`` must be shard-sorted and ``block_sids [nblk,
@@ -452,19 +601,29 @@ def foresight_traverse_clustered(fused: jax.Array, block_sids: jax.Array,
     assert K <= S, (f"ClusterPlan with K={K} > S={S}: plan built against a "
                     "different shard count (stale after a rebalance?) — "
                     "rebuild it from the current boundaries")
-    if max_steps == 0:
-        max_steps = traversal_bound(L, cap)
+    plan = plan_launch(levels=L, capacity=cap, batch=B,
+                       max_steps=max_steps, n_shards=K)
+    nw = 1 if fat_keys is None else fat_keys.shape[-1]
     kernel = functools.partial(_foresight_clustered_kernel, levels=L,
-                               cap=cap, max_steps=max_steps)
+                               cap=cap, max_steps=plan.max_steps,
+                               node_width=nw)
+    in_specs = [
+        pl.BlockSpec((QBLK,), lambda j, k, bs, nd: (j,)),
+        pl.BlockSpec((QBLK,), lambda j, k, bs, nd: (j,)),
+        pl.BlockSpec((1, L, cap, 2),
+                     lambda j, k, bs, nd: (bs[j, k], 0, 0, 0)),
+    ]
+    operands = [block_sids.astype(jnp.int32), ndist.astype(jnp.int32),
+                queries.astype(jnp.int32), shard_ids.astype(jnp.int32),
+                fused]
+    if nw > 1:
+        in_specs.append(pl.BlockSpec((1, cap, nw),
+                                     lambda j, k, bs, nd: (bs[j, k], 0, 0)))
+        operands.append(fat_keys)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(nblk, K),
-        in_specs=[
-            pl.BlockSpec((QBLK,), lambda j, k, bs, nd: (j,)),
-            pl.BlockSpec((QBLK,), lambda j, k, bs, nd: (j,)),
-            pl.BlockSpec((1, L, cap, 2),
-                         lambda j, k, bs, nd: (bs[j, k], 0, 0, 0)),
-        ],
+        grid=plan.grid,
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((QBLK,), lambda j, k, bs, nd: (j,)),
             pl.BlockSpec((QBLK,), lambda j, k, bs, nd: (j,)),
@@ -478,15 +637,15 @@ def foresight_traverse_clustered(fused: jax.Array, block_sids: jax.Array,
             jax.ShapeDtypeStruct((B,), jnp.int32),
         ],
         interpret=interpret,
-    )(block_sids.astype(jnp.int32), ndist.astype(jnp.int32),
-      queries.astype(jnp.int32), shard_ids.astype(jnp.int32), fused)
+    )(*operands)
     return node, key
 
 
 @functools.partial(jax.jit, static_argnames=("max_steps", "interpret"))
 def base_traverse_clustered(nxt: jax.Array, keys: jax.Array,
                             block_sids: jax.Array, ndist: jax.Array,
-                            shard_ids: jax.Array, queries: jax.Array, *,
+                            shard_ids: jax.Array, queries: jax.Array,
+                            fat_keys: Optional[jax.Array] = None, *,
                             max_steps: int = 0, interpret: bool = True):
     """Clustered base search over ``nxt [S, L, cap]`` / ``keys [S, cap]``."""
     S, L, cap = nxt.shape
@@ -496,19 +655,28 @@ def base_traverse_clustered(nxt: jax.Array, keys: jax.Array,
     assert K <= S, (f"ClusterPlan with K={K} > S={S}: plan built against a "
                     "different shard count (stale after a rebalance?) — "
                     "rebuild it from the current boundaries")
-    if max_steps == 0:
-        max_steps = traversal_bound(L, cap)
+    plan = plan_launch(levels=L, capacity=cap, batch=B,
+                       max_steps=max_steps, n_shards=K)
+    nw = 1 if fat_keys is None else fat_keys.shape[-1]
     kernel = functools.partial(_base_clustered_kernel, levels=L, cap=cap,
-                               max_steps=max_steps)
+                               max_steps=plan.max_steps, node_width=nw)
+    in_specs = [
+        pl.BlockSpec((QBLK,), lambda j, k, bs, nd: (j,)),
+        pl.BlockSpec((QBLK,), lambda j, k, bs, nd: (j,)),
+        pl.BlockSpec((1, L, cap), lambda j, k, bs, nd: (bs[j, k], 0, 0)),
+        pl.BlockSpec((1, cap), lambda j, k, bs, nd: (bs[j, k], 0)),
+    ]
+    operands = [block_sids.astype(jnp.int32), ndist.astype(jnp.int32),
+                queries.astype(jnp.int32), shard_ids.astype(jnp.int32),
+                nxt, keys]
+    if nw > 1:
+        in_specs.append(pl.BlockSpec((1, cap, nw),
+                                     lambda j, k, bs, nd: (bs[j, k], 0, 0)))
+        operands.append(fat_keys)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(nblk, K),
-        in_specs=[
-            pl.BlockSpec((QBLK,), lambda j, k, bs, nd: (j,)),
-            pl.BlockSpec((QBLK,), lambda j, k, bs, nd: (j,)),
-            pl.BlockSpec((1, L, cap), lambda j, k, bs, nd: (bs[j, k], 0, 0)),
-            pl.BlockSpec((1, cap), lambda j, k, bs, nd: (bs[j, k], 0)),
-        ],
+        grid=plan.grid,
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((QBLK,), lambda j, k, bs, nd: (j,)),
             pl.BlockSpec((QBLK,), lambda j, k, bs, nd: (j,)),
@@ -522,31 +690,34 @@ def base_traverse_clustered(nxt: jax.Array, keys: jax.Array,
             jax.ShapeDtypeStruct((B,), jnp.int32),
         ],
         interpret=interpret,
-    )(block_sids.astype(jnp.int32), ndist.astype(jnp.int32),
-      queries.astype(jnp.int32), shard_ids.astype(jnp.int32), nxt, keys)
+    )(*operands)
     return node, key
 
 
 @functools.partial(jax.jit, static_argnames=("max_steps", "interpret"))
-def base_traverse(nxt: jax.Array, keys: jax.Array, queries: jax.Array, *,
+def base_traverse(nxt: jax.Array, keys: jax.Array, queries: jax.Array,
+                  fat_keys: Optional[jax.Array] = None, *,
                   max_steps: int = 0, interpret: bool = True):
     """Batched base (no-foresight) search. Returns (node[B], cand_key[B])."""
     L, cap = nxt.shape
     B = queries.shape[0]
-    assert B % QBLK == 0, "pad queries to a multiple of QBLK"
-    if max_steps == 0:
-        max_steps = traversal_bound(L, cap)
-    grid = (B // QBLK,)
+    plan = plan_launch(levels=L, capacity=cap, batch=B, max_steps=max_steps)
+    nw = 1 if fat_keys is None else fat_keys.shape[-1]
     kernel = functools.partial(_base_kernel, levels=L, cap=cap,
-                               max_steps=max_steps)
+                               max_steps=plan.max_steps, node_width=nw)
+    in_specs = [
+        pl.BlockSpec((QBLK,), lambda i: (i,)),
+        pl.BlockSpec((L, cap), lambda i: (0, 0)),
+        pl.BlockSpec((cap,), lambda i: (0,)),
+    ]
+    operands = [queries.astype(jnp.int32), nxt, keys]
+    if nw > 1:
+        in_specs.append(pl.BlockSpec((cap, nw), lambda i: (0, 0)))
+        operands.append(fat_keys)
     node, key = pl.pallas_call(
         kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((QBLK,), lambda i: (i,)),
-            pl.BlockSpec((L, cap), lambda i: (0, 0)),
-            pl.BlockSpec((cap,), lambda i: (0,)),
-        ],
+        grid=plan.grid,
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((QBLK,), lambda i: (i,)),
             pl.BlockSpec((QBLK,), lambda i: (i,)),
@@ -556,5 +727,5 @@ def base_traverse(nxt: jax.Array, keys: jax.Array, queries: jax.Array, *,
             jax.ShapeDtypeStruct((B,), jnp.int32),
         ],
         interpret=interpret,
-    )(queries.astype(jnp.int32), nxt, keys)
+    )(*operands)
     return node, key

@@ -18,9 +18,10 @@ keys.  A smaller explicit ``k_shards`` trades that guarantee for a
 smaller grid: under-K lanes degrade to a SIGNALLED miss (never a wrong
 hit), exactly the single-device traced contract.
 
-Node ids come back device-global: ``device * (S_local * cap) + local``,
-``-1`` for unserved lanes — the mesh analogue of the sharded path's
-``sid * cap + node`` composition.
+Node ids come back device-global: ``device * (S_local * cap * node_width)
++ local`` (``node_width = 1`` on the scalar layout), ``-1`` for unserved
+lanes — the mesh analogue of the sharded path's ``sid * cap + node``
+composition, element-flat under the fat layout.
 """
 from __future__ import annotations
 
@@ -55,8 +56,9 @@ def _kernel_search_fn(mesh, k_shards, max_steps, interpret):
                                     k_shards=k_shards)
         cap = local.shard_capacity
         S = local.n_shards
+        nw = local.node_width   # fat ids are element-flat: stride cap * nw
         me = lax.axis_index(INDEX_AXIS).astype(jnp.int32)
-        gnode = jnp.where(res.node >= 0, me * (S * cap) + res.node, -1)
+        gnode = jnp.where(res.node >= 0, me * (S * cap * nw) + res.node, -1)
         found = _exchange_back(res.found.astype(jnp.int32), perm, starts,
                                did_s, D)
         vals = _exchange_back(res.vals, perm, starts, did_s, D)

@@ -81,7 +81,9 @@ class KernelSearchResult(NamedTuple):
     found: jax.Array   # [B] bool
     vals: jax.Array    # [B] int32
     node: jax.Array    # [B] int32 — shard-local id composed as sid*cap + node
-                       #             on the sharded path (shard-global)
+                       #             on the sharded path (shard-global); fat
+                       #             layouts use element-flat ids with stride
+                       #             cap * node_width
 
 
 def _pad(q: jax.Array) -> Tuple[jax.Array, int]:
@@ -96,25 +98,28 @@ def vmem_footprint(state: Union[SkipListState, ShardedSkipList]) -> int:
     """Bytes the (per-shard) index tile occupies in VMEM."""
     if isinstance(state, ShardedSkipList):
         return shard_vmem_footprint(state.levels, state.shard_capacity,
-                                    state.foresight)
+                                    state.foresight, state.node_width)
     return shard_vmem_footprint(state.levels, state.capacity,
-                                state.foresight)
+                                state.foresight, state.node_width)
 
 
 def fits_vmem(state: Union[SkipListState, ShardedSkipList]) -> bool:
     return vmem_footprint(state) <= VMEM_BUDGET_BYTES
 
 
-def shard_vmem_footprint(levels: int, capacity: int, foresight: bool) -> int:
-    return tile_bytes(levels, capacity, foresight)
+def shard_vmem_footprint(levels: int, capacity: int, foresight: bool,
+                         node_width: int = 1) -> int:
+    return tile_bytes(levels, capacity, foresight, node_width)
 
 
-def auto_shards(n: int, levels: int, foresight: bool = True) -> int:
+def auto_shards(n: int, levels: int, foresight: bool = True,
+                node_width: int = 1) -> int:
     """Smallest power-of-two shard count whose per-shard tile fits VMEM."""
     s = 1
     while s <= MAX_SHARDS:
-        cap = shd.shard_capacity_for(n, s)
-        if shard_vmem_footprint(levels, cap, foresight) <= VMEM_BUDGET_BYTES:
+        cap = shd.shard_capacity_for(n, s, node_width)
+        if shard_vmem_footprint(levels, cap, foresight,
+                                node_width) <= VMEM_BUDGET_BYTES:
             return s
         s *= 2
     raise ValueError(f"index with n={n}, levels={levels} cannot be sharded "
@@ -133,6 +138,16 @@ def shard_state(state: SkipListState, n_shards: int) -> ShardedSkipList:
     a big index repeatedly should build a ``ShardedSkipList`` once (e.g.
     ``IndexedSampleStore(n_shards=...)``) instead of converting per call.
     """
+    from repro.core.skiplist import sorted_live_kv
+    if state.node_width > 1:
+        # fat layout: element-sorted keys come from the run arrays (the
+        # routing keys in state.keys are only per-node minima)
+        keys_sorted, vals_sorted = sorted_live_kv(state)
+        valid = jnp.arange(keys_sorted.shape[0]) < state.n
+        return shd.build_sharded(keys_sorted, vals_sorted,
+                                 n_shards=n_shards, levels=state.levels,
+                                 foresight=state.foresight, valid=valid,
+                                 node_width=state.node_width)
     cap = state.capacity
     m_total = cap - 2                              # static live-count bound
     order = jnp.argsort(state.keys)                # [cap]; head first
@@ -304,16 +319,17 @@ def _degenerate_launch(shl: ShardedSkipList, plan: ClusterPlan, split, *,
     node_s = jnp.zeros((nblk, QBLK), jnp.int32)
     ckey_s = jnp.zeros((nblk, QBLK), jnp.int32)
 
+    fatk = shl.shards.fat_keys          # None on the scalar layout
     bs = plan.block_sids[keep_j][:, :k_small]
     nd = plan.ndist[keep_j]
     qk, sk = qs[keep_j].reshape(-1), ss[keep_j].reshape(-1)
     if shl.foresight:
         nk, ck = foresight_traverse_clustered(
-            shl.shards.fused, bs, nd, sk, qk, max_steps=max_steps,
+            shl.shards.fused, bs, nd, sk, qk, fatk, max_steps=max_steps,
             interpret=interpret)
     else:
         nk, ck = base_traverse_clustered(
-            shl.shards.nxt, shl.shards.keys, bs, nd, sk, qk,
+            shl.shards.nxt, shl.shards.keys, bs, nd, sk, qk, fatk,
             max_steps=max_steps, interpret=interpret)
     node_s = node_s.at[keep_j].set(nk.reshape(-1, QBLK))
     ckey_s = ckey_s.at[keep_j].set(ck.reshape(-1, QBLK))
@@ -321,12 +337,12 @@ def _degenerate_launch(shl: ShardedSkipList, plan: ClusterPlan, split, *,
     qd, sd = qs[strag_j].reshape(-1), ss[strag_j].reshape(-1)
     if shl.foresight:
         nn, cn = foresight_traverse_sharded(
-            shl.shards.fused, sd, qd, max_steps=max_steps,
+            shl.shards.fused, sd, qd, fatk, max_steps=max_steps,
             interpret=interpret)
     else:
         nn, cn = base_traverse_sharded(
-            shl.shards.nxt, shl.shards.keys, sd, qd, max_steps=max_steps,
-            interpret=interpret)
+            shl.shards.nxt, shl.shards.keys, sd, qd, fatk,
+            max_steps=max_steps, interpret=interpret)
     node_s = node_s.at[strag_j].set(nn.reshape(-1, QBLK))
     ckey_s = ckey_s.at[strag_j].set(cn.reshape(-1, QBLK))
     return node_s.reshape(-1), ckey_s.reshape(-1)
@@ -389,13 +405,14 @@ def search_kernel_sharded(shl: ShardedSkipList, queries: jax.Array, *,
         elif shl.foresight:
             node, ckey = foresight_traverse_clustered(
                 shl.shards.fused, plan.block_sids, plan.ndist,
-                plan.sid_sorted, plan.q_sorted, max_steps=max_steps,
-                interpret=interpret)
+                plan.sid_sorted, plan.q_sorted, shl.shards.fat_keys,
+                max_steps=max_steps, interpret=interpret)
         else:
             node, ckey = base_traverse_clustered(
                 shl.shards.nxt, shl.shards.keys, plan.block_sids,
                 plan.ndist, plan.sid_sorted, plan.q_sorted,
-                max_steps=max_steps, interpret=interpret)
+                shl.shards.fat_keys, max_steps=max_steps,
+                interpret=interpret)
         node, ckey = node[plan.inv], ckey[plan.inv]   # unsort: bit-identical
         sid = plan.sid_sorted[plan.inv]
         if isinstance(plan.ndist, jax.core.Tracer):
@@ -417,18 +434,25 @@ def search_kernel_sharded(shl: ShardedSkipList, queries: jax.Array, *,
         served = jnp.ones_like(q, jnp.bool_)
         if shl.foresight:
             node, ckey = foresight_traverse_sharded(
-                shl.shards.fused, sid, q, max_steps=max_steps,
-                interpret=interpret)
+                shl.shards.fused, sid, q, shl.shards.fat_keys,
+                max_steps=max_steps, interpret=interpret)
         else:
             node, ckey = base_traverse_sharded(
                 shl.shards.nxt, shl.shards.keys, sid, q,
-                max_steps=max_steps, interpret=interpret)
+                shl.shards.fat_keys, max_steps=max_steps,
+                interpret=interpret)
     node, ckey, sid = node[:B], ckey[:B], sid[:B]
     served = served[:B]
     found = (ckey == queries.astype(jnp.int32)) & served
-    cap = shl.shard_capacity
-    flat_vals = shl.shards.vals.reshape(-1)
-    gnode = jnp.where(served, sid * cap + node, -1)
+    nw = shl.node_width
+    if nw > 1:
+        # fat: kernels return ELEMENT-flat ids (owner * nw + pos), so the
+        # shard-global stride is the element capacity cap * nw
+        flat_vals = shl.shards.fat_vals.reshape(-1)
+        gnode = jnp.where(served, sid * (shl.shard_capacity * nw) + node, -1)
+    else:
+        flat_vals = shl.shards.vals.reshape(-1)
+        gnode = jnp.where(served, sid * shl.shard_capacity + node, -1)
     vals = jnp.where(found, jnp.take(flat_vals, jnp.maximum(gnode, 0)),
                      NULL_VAL)
     return KernelSearchResult(found, vals, gnode)
@@ -472,14 +496,19 @@ def search_kernel(state: Union[SkipListState, ShardedSkipList],
             "monolithic state once; core.sharded.build_sharded builds one)")
     q, B = _pad(queries.astype(jnp.int32))
     if state.foresight:
-        node, ckey = foresight_traverse(state.fused, q, max_steps=max_steps,
+        node, ckey = foresight_traverse(state.fused, q, state.fat_keys,
+                                        max_steps=max_steps,
                                         interpret=interpret)
     else:
-        node, ckey = base_traverse(state.nxt, state.keys, q,
+        node, ckey = base_traverse(state.nxt, state.keys, q, state.fat_keys,
                                    max_steps=max_steps, interpret=interpret)
     node, ckey = node[:B], ckey[:B]
     found = ckey == queries.astype(jnp.int32)
-    vals = jnp.where(found, jnp.take(state.vals, node), NULL_VAL)
+    if state.node_width > 1:   # fat: node is element-flat into the runs
+        vals = jnp.where(found, jnp.take(state.fat_vals.reshape(-1), node),
+                         NULL_VAL)
+    else:
+        vals = jnp.where(found, jnp.take(state.vals, node), NULL_VAL)
     return KernelSearchResult(found, vals, node)
 
 

@@ -94,6 +94,9 @@ class PagedCacheConfig:
                                  # all devices once n_pages crosses
                                  # mesh_min_pages AND >1 device exists)
     mesh_min_pages: int = 1 << 16  # auto-mode size threshold
+    node_width: int = 1          # >1 = fat-node table layout (B keys per
+                                 # node, one gather serves a lane tile);
+                                 # bit-identical to the scalar layout
 
 
 class PageTable:
@@ -111,15 +114,17 @@ class PageTable:
             # the kernel path pins one shard tile in VMEM per grid step;
             # size the partition so a full table ships fitting tiles
             n_shards = max(n_shards, kops.auto_shards(
-                cfg.n_pages, cfg.levels, cfg.foresight))
+                cfg.n_pages, cfg.levels, cfg.foresight,
+                node_width=cfg.node_width))
         if cfg.rebalance:
             # build AT the ceiling: spare shards are the dead slots the
             # traced splits spend, and the jitted apply traces once there
             n_shards = max(n_shards, cfg.max_shards or 8)
         if n_shards > 1:
-            cap = shd.shard_capacity_for(cfg.n_pages, n_shards)
+            cap = shd.shard_capacity_for(cfg.n_pages, n_shards,
+                                         cfg.node_width)
         else:
-            cap = int(2 ** np.ceil(np.log2(cfg.n_pages * 2 + 4)))
+            cap = shd.shard_capacity_for(cfg.n_pages, 1, cfg.node_width)
         n_dev = cfg.mesh_devices
         if n_dev == 0:       # auto: mesh once the table outgrows a device
             n_dev = len(jax.devices()) if cfg.n_pages >= cfg.mesh_min_pages \
@@ -137,11 +142,13 @@ class PageTable:
             self.index = mshi.empty_mesh_index(
                 n_devices=n_dev, n_shards=n_shards, capacity=cap,
                 levels=cfg.levels, foresight=cfg.foresight, seed=cfg.seed,
-                key_span=MAX_SEQS << BLOCK_BITS)
+                key_span=MAX_SEQS << BLOCK_BITS,
+                node_width=cfg.node_width)
         else:
             self.index = shd.empty_sharded(
                 n_shards=n_shards, capacity=cap, levels=cfg.levels,
-                foresight=cfg.foresight, seed=cfg.seed)
+                foresight=cfg.foresight, seed=cfg.seed,
+                node_width=cfg.node_width)
         self.free = list(range(cfg.n_pages - 1, -1, -1))
         # one compiled apply at the shard ceiling; rebalance/seed are
         # baked in statically, batch shapes pow2-padded by _apply.  The
